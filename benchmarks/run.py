@@ -1,0 +1,355 @@
+"""Benchmark harness — one benchmark per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV. Benches run on the real single
+CPU device; anything needing multiple devices (collective byte counts)
+spawns a subprocess with forced host devices, mirroring the dry-run.
+
+  ps_vs_broadcast_L{4,8}   paper §Learner Coordination: O(L) vs O(L^2)
+                           bytes from compiled HLO (derived = byte ratio)
+  software_ps_round        paper §Parameter Server throughput-critical path
+  solver_*                 paper §PS solvers: rounds to reach loss<0.05
+  scheduler_colloquium     paper §Usage Study: 45 users / 135 jobs burst
+  cursor_claims            paper §Global Cursor: claims/s (8 threads)
+  kernel_*                 Pallas kernels (interpret) vs jnp oracle
+  checkpoint_save/restore  paper §Fault tolerance: MB/s
+  quantize_throughput      gradient compression: MB/s + compression ratio
+  rest_api                 paper §API layer: requests/s
+  roofline_table           §Roofline summary over results/dryrun artifacts
+"""
+import json
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+ROWS = []
+
+
+def emit(name, us, derived=""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn, n=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_ps_vs_broadcast():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, re, json
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp
+from repro.core.solvers import SolverConfig, make_solver
+from repro.optim.optimizers import OptConfig
+from repro.launch.mesh import make_mesh
+from repro.analysis.roofline import analyze_hlo_text
+
+out = {}
+for nl in (4, 8):
+    mesh = make_mesh(data=nl, model=1)
+    D = 4096
+    loss = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+    p0 = {"w": jnp.zeros((D,))}
+    batches = {"x": jnp.zeros((1, nl, 4, D)), "y": jnp.zeros((1, nl, 4))}
+    res = {}
+    for mode in ("ps", "broadcast"):
+        s = make_solver(loss, p0, OptConfig(name="sgd"),
+                        SolverConfig(name="psgd", push_mode=mode), nl,
+                        mesh=mesh)
+        st = s.init_state(p0)
+        txt = jax.jit(s._round).lower(st, batches).compile().as_text()
+        a = analyze_hlo_text(txt)
+        res[mode] = a["ici_bytes_per_device"]
+    out[nl] = res
+print("RESULT " + json.dumps(out))
+""" % str(ROOT / "src")
+    t0 = time.perf_counter()
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600)
+    us = (time.perf_counter() - t0) * 1e6
+    line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")]
+    if not line:
+        emit("ps_vs_broadcast", us, f"ERROR:{p.stderr[-200:]}")
+        return
+    res = json.loads(line[0][7:])
+    for nl, r in sorted(res.items()):
+        ratio = r["broadcast"] / max(r["ps"], 1)
+        emit(f"ps_vs_broadcast_L{nl}", us / len(res),
+             f"bytes_ps={r['ps']:.0f};bytes_bc={r['broadcast']:.0f};"
+             f"ratio={ratio:.2f}")
+
+
+def bench_software_ps():
+    from repro.core.software_ps import SoftwareParameterServer
+    f = 1 << 20
+    init = np.zeros(f, np.float32)
+    ps = SoftwareParameterServer(init, n_shards=4, n_learners=4,
+                                 optimizer="adam", lr=1e-3)
+    for i in range(4):
+        ps.join(i)
+    g = [np.random.randn(f).astype(np.float32) for _ in range(4)]
+
+    def round_():
+        ts = [threading.Thread(target=ps.push, args=(i, g[i]))
+              for i in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        ps.pull(0)
+
+    us = timeit(round_, n=5)
+    mbps = (4 * g[0].nbytes + init.nbytes) / (us / 1e6) / 1e6
+    emit("software_ps_round", us, f"agg_MBps={mbps:.0f}")
+
+
+def bench_solvers():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.solvers import SolverConfig, make_solver
+    from repro.optim.optimizers import OptConfig
+    D, NL, B = 16, 4, 16
+    W = jax.random.normal(jax.random.PRNGKey(0), (D,))
+    loss = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+    p0 = {"w": jnp.zeros((D,))}
+
+    def batches(rng, h):
+        xs = jax.random.normal(rng, (h, NL, B, D))
+        return {"x": xs, "y": xs @ W}
+
+    for scfg in (SolverConfig(name="psgd"),
+                 SolverConfig(name="psgd", compress=True),
+                 SolverConfig(name="modelavg", comm_every=4),
+                 SolverConfig(name="easgd", comm_every=4),
+                 SolverConfig(name="downpour", comm_every=4)):
+        s = make_solver(loss, p0, OptConfig(name="sgd", lr=0.1), scfg, NL)
+        st = s.init_state(p0)
+        rng = jax.random.PRNGKey(1)
+        rounds = 0
+        t0 = time.perf_counter()
+        m = {"loss": 1e9}
+        while float(m["loss"]) > 0.05 and rounds < 400:
+            rng, k = jax.random.split(rng)
+            st, m = s.round(st, batches(k, scfg.rounds_h))
+            rounds += 1
+        us = (time.perf_counter() - t0) / max(rounds, 1) * 1e6
+        tag = scfg.name + ("_q8" if scfg.compress else "")
+        emit(f"solver_{tag}", us,
+             f"rounds_to_0.05={rounds};steps={rounds * scfg.rounds_h};"
+             f"wire_B_per_round={s.wire_bytes_per_round()}")
+
+
+def bench_scheduler():
+    import tempfile
+
+    from repro.service.core import DLaaSCore, default_cluster
+    wd = tempfile.mkdtemp(prefix="dlaas_bench_")
+    core = DLaaSCore(wd, cluster=default_cluster(16, 8),
+                     tick_interval=0.002)
+    MAN = ("name: b\nlearners: 1\ngpus: %d\nsteps: 1\n"
+           "framework:\n  name: repro-mlp\n  d_in: 8\n  n_classes: 2\n")
+    try:
+        t0 = time.perf_counter()
+        tids = []
+        lock = threading.Lock()
+
+        def user(u):
+            mid = core.deploy_model(MAN % (1 + u % 3),
+                                    user=f"u{u}")["model_id"]
+            got = [core.create_training(mid, user=f"u{u}")["training_id"]
+                   for _ in range(3)]
+            with lock:
+                tids.extend(got)
+
+        ts = [threading.Thread(target=user, args=(u,)) for u in range(15)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        done = sum(1 for t in tids
+                   if core.wait_for(t, timeout=240) == "COMPLETED")
+        dt = time.perf_counter() - t0
+        emit("scheduler_colloquium", dt / max(len(tids), 1) * 1e6,
+             f"jobs={len(tids)};completed={done};makespan_s={dt:.1f};"
+             f"jobs_per_s={len(tids) / dt:.1f}")
+    finally:
+        core.close()
+
+
+def bench_cursor():
+    from repro.core.cursor import GlobalCursor
+    from repro.platform.zookeeper import ZooKeeper
+    cur = GlobalCursor(ZooKeeper(), "/c", 10 ** 9)
+    n = 2000
+
+    def claims():
+        ts = []
+        for _ in range(8):
+            t = threading.Thread(
+                target=lambda: [cur.next_chunk(16)
+                                for _ in range(n // 8)])
+            ts.append(t)
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+
+    us = timeit(claims, n=3)
+    emit("cursor_claims", us / n, f"claims_per_s={n / (us / 1e6):.0f}")
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.models.attention import flash_attention_ref, repeat_kv
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64))
+    o1 = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o2 = flash_attention_ref(q, repeat_kv(k, 4), repeat_kv(v, 4),
+                             causal=True, q_chunk=64, k_chunk=64)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, causal=True, block_q=64,
+                            block_k=64)), n=3)
+    emit("kernel_flash_attn_interp", us, f"allclose_err={err:.2e}")
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 256, 4, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4),
+                                           (1, 256, 4)))
+    b = jax.random.normal(jax.random.PRNGKey(5), (1, 256, 1, 16)) * 0.3
+    c = jax.random.normal(jax.random.PRNGKey(6), (1, 256, 1, 16)) * 0.3
+    from repro.models.mamba import ssd_scan_ref
+    y1 = ops.ssd_scan(x, dt, jnp.zeros(4), b, c, chunk=64)
+    y2, _ = ssd_scan_ref(x, dt, jnp.zeros(4), b, c, chunk=64)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    us = timeit(lambda: jax.block_until_ready(
+        ops.ssd_scan(x, dt, jnp.zeros(4), b, c, chunk=64)), n=3)
+    emit("kernel_ssd_scan_interp", us, f"allclose_err={err:.2e}")
+
+    g = jax.random.normal(jax.random.PRNGKey(7), (4, 1 << 16))
+    p = jax.random.normal(jax.random.PRNGKey(8), (1 << 16,))
+    m = jnp.zeros(1 << 16)
+    us = timeit(lambda: jax.block_until_ready(
+        ops.ps_aggregate(g, p, m, m, 1, solver="adam")), n=3)
+    emit("kernel_ps_aggregate_interp", us,
+         f"elems_per_s={(1 << 16) / (us / 1e6):.2e}")
+
+
+def bench_checkpoint():
+    import tempfile
+
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpoint import CheckpointManager
+    d = tempfile.mkdtemp(prefix="ckpt_bench_")
+    tree = {"w": jnp.zeros((1 << 22,), jnp.float32)}      # 16 MB
+    cm = CheckpointManager(d, async_save=False)
+    us_save = timeit(lambda: cm.save(1, tree), n=3)
+    emit("checkpoint_save_16MB", us_save,
+         f"MBps={16 / (us_save / 1e6):.0f}")
+    us_restore = timeit(lambda: cm.restore(1, tree), n=3)
+    emit("checkpoint_restore_16MB", us_restore,
+         f"MBps={16 / (us_restore / 1e6):.0f}")
+
+
+def bench_quantize():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compression import compress_with_feedback, wire_bytes
+    x = jax.random.normal(jax.random.PRNGKey(0), (1 << 22,))
+    e = jnp.zeros_like(x)
+    fn = jax.jit(lambda x, e: compress_with_feedback(x, e))
+    jax.block_until_ready(fn(x, e))
+    us = timeit(lambda: jax.block_until_ready(fn(x, e)), n=5)
+    ratio = (x.size * 4) / wire_bytes(x.size)
+    emit("quantize_throughput", us,
+         f"MBps={x.size * 4 / (us / 1e6) / 1e6:.0f};"
+         f"compression={ratio:.2f}x")
+
+
+def bench_rest_api():
+    import tempfile
+    import urllib.request
+
+    from repro.service.rest import DLaaSServer
+    wd = tempfile.mkdtemp(prefix="dlaas_rest_")
+    with DLaaSServer(wd) as srv:
+        man = ("name: x\nlearners: 1\nsteps: 1\n"
+               "framework:\n  name: repro-mlp\n")
+        body = json.dumps({"manifest": man}).encode()
+
+        def call():
+            req = urllib.request.Request(
+                f"{srv.url}/v1/models", data=body, method="POST")
+            req.add_header("Content-Type", "application/json")
+            urllib.request.urlopen(req).read()
+
+        us = timeit(call, n=20)
+        emit("rest_api_deploy", us, f"rps={1e6 / us:.0f}")
+
+
+def bench_roofline_table():
+    """Summarise §Roofline over existing dry-run artifacts (if present)."""
+    from repro.analysis.roofline import (KERNEL_SCOPES, analyze_file,
+                                         model_flops, roofline_row)
+    from repro.configs.base import SHAPES_BY_NAME
+    from repro.configs.registry import get_arch
+    d = ROOT / "results" / "dryrun"
+    hlos = sorted(d.glob("*__single.hlo.gz")) if d.exists() else []
+    if not hlos:
+        emit("roofline_table", 0.0, "no_artifacts(run launch/dryrun first)")
+        return
+    t0 = time.perf_counter()
+    worst = (None, 1.0)
+    for h in hlos:
+        parts = h.name.replace(".hlo.gz", "").split("__")
+        if len(parts) != 3 or parts[2] != "single":
+            continue
+        arch, shape = parts[0], parts[1]
+        try:
+            a = analyze_file(str(h), KERNEL_SCOPES)
+            row = roofline_row({}, a, get_arch(arch),
+                               SHAPES_BY_NAME[shape], 256)
+            emit(f"roofline[{arch}|{shape}]",
+                 max(a["compute_s"], a["memory_s"],
+                     a["collective_s"]) * 1e6,
+                 f"dom={row['dominant']};frac={row['roofline_frac']};"
+                 f"useful={row['useful_ratio']}")
+            if row["roofline_frac"] < worst[1]:
+                worst = (f"{arch}|{shape}", row["roofline_frac"])
+        except Exception as e:
+            emit(f"roofline[{arch}|{shape}]", 0.0,
+                 f"ERROR:{type(e).__name__}")
+    emit("roofline_table", (time.perf_counter() - t0) * 1e6,
+         f"cells={len(hlos)};worst={worst[0]}:{worst[1]}")
+
+
+def main() -> None:
+    benches = [
+        bench_software_ps, bench_solvers, bench_cursor,
+        bench_checkpoint, bench_quantize, bench_kernels,
+        bench_rest_api, bench_scheduler, bench_ps_vs_broadcast,
+        bench_roofline_table,
+    ]
+    print("name,us_per_call,derived")
+    for b in benches:
+        try:
+            b()
+        except Exception as e:  # keep the harness running
+            emit(b.__name__, 0.0, f"ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

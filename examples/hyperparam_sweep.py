@@ -1,0 +1,69 @@
+"""The colloquium exercise (paper §DLaaS Usage Study): users sweep
+hyperparameters through the API to push accuracy as high as possible.
+
+Submits a family of jobs with different learning rates / step budgets /
+learner counts, monitors them concurrently, and reports the leaderboard —
+the 71% -> 77% workflow on our synthetic classification task.
+
+  PYTHONPATH=src python examples/hyperparam_sweep.py
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.service.core import DLaaSCore, default_cluster  # noqa: E402
+
+MANIFEST = """\
+name: sweep-base
+learners: 1
+gpus: 1
+steps: 12
+lr: 0.02
+framework:
+  name: repro-mlp
+  d_in: 24
+  n_classes: 6
+"""
+
+
+def main():
+    wd = tempfile.mkdtemp(prefix="dlaas_sweep_")
+    core = DLaaSCore(wd, cluster=default_cluster(8, 4))
+    try:
+        mid = core.deploy_model(MANIFEST, user="sweeper")["model_id"]
+        grid = []
+        for lr in (0.02, 0.1, 0.3):
+            for steps in (12, 40):
+                for learners in (1, 2):
+                    grid.append({"lr": lr, "steps": steps,
+                                 "learners": learners})
+        jobs = []
+        for hp in grid:
+            tid = core.create_training(mid, overrides=hp,
+                                       user="sweeper")["training_id"]
+            jobs.append((tid, hp))
+        print(f"submitted {len(jobs)} tuning jobs")
+        board = []
+        for tid, hp in jobs:
+            st = core.wait_for(tid, timeout=180)
+            acc = core.metrics.series(tid, "accuracy").values
+            board.append((acc[-1] if acc else 0.0, hp, tid, st))
+        board.sort(key=lambda r: r[0], reverse=True)
+        print(f"{'acc':>6}  {'lr':>5} {'steps':>5} {'learners':>8}  job")
+        for acc, hp, tid, st in board:
+            print(f"{acc:6.3f}  {hp['lr']:5.2f} {hp['steps']:5d} "
+                  f"{hp['learners']:8d}  {tid} [{st}]")
+        base = min(a for a, *_ in board)
+        best = board[0][0]
+        print(f"\ntuning improved accuracy {base:.1%} -> {best:.1%} "
+              f"(paper: 71% -> 77%)")
+        assert best > base
+    finally:
+        core.close()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

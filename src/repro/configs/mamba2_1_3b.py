@@ -1,0 +1,16 @@
+"""Mamba-2 1.3B — SSD (state-space duality). [arXiv:2405.21060; unverified]"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,          # attention-free
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk_size=256),
+    subquadratic=True,
+    source="arXiv:2405.21060; unverified",
+)

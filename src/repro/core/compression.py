@@ -1,0 +1,55 @@
+"""Gradient compression: int8 block quantization with error feedback.
+
+Used on the parameter-server push path (DESIGN.md §2): the pushed vector is
+quantized per block of 256 values with an f32 scale (≈2x byte reduction vs
+bf16, 4x vs f32, wire format int8+scales); the quantization residual is
+carried in an error-feedback buffer so the compression is unbiased over
+time (Seide et al. style).
+
+This is the pure-jnp reference; kernels/quantize.py is the Pallas TPU
+mirror validated against it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def pad_to_block(n: int, block: int = BLOCK) -> int:
+    return -(-n // block) * block
+
+
+def quantize_int8(x, block: int = BLOCK):
+    """x (N,) with N % block == 0 -> (q int8 (N,), scale f32 (N/block,))."""
+    xb = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = amax / 127.0
+    q = jnp.round(xb / jnp.maximum(scale[:, None], 1e-30))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_int8(q, scale, block: int = BLOCK):
+    qb = q.astype(jnp.float32).reshape(-1, block)
+    return (qb * scale[:, None]).reshape(-1)
+
+
+def compress_with_feedback(x, err, block: int = BLOCK):
+    """Quantize (x + err); return (q, scale, new_err, wire_view).
+
+    ``wire_view`` is the dequantized value that actually travels — callers
+    aggregate it (numerics match the wire format exactly); the residual
+    goes back into the feedback buffer."""
+    y = x.astype(jnp.float32) + err
+    q, scale = quantize_int8(y, block)
+    wire = dequantize_int8(q, scale, block)
+    return q, scale, y - wire, wire
+
+
+def wire_bytes(n: int, block: int = BLOCK) -> int:
+    """Bytes on the wire for an n-element compressed push."""
+    return n + 4 * (n // block)

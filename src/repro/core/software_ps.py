@@ -1,0 +1,159 @@
+"""Software parameter server (paper §Parameter Server) — the control-plane
+faithful implementation used by the as-a-Service path, where learners are
+simulated containers (threads).
+
+Mirrors the paper's structure: (i) a group of PS *shards* that collectively
+store and aggregate the model partitions, (ii) a PS *client* that evenly
+partitions the flat model by shard ID ("as all the learners of the same
+training job follow exactly the same model partitioning scheme, the same
+partitions from different learners are gathered by the same server"), and
+synchronous ``push``/``pull`` plus ``join``/``leave`` connection calls.
+Data moves in raw binary (numpy views) — "DLaaS does not use any parameter
+serialization or deserialization".
+
+Aggregation triggers: ``bsp`` waits until all partitions are gathered
+(model averaging / PSGD), ``on_arrival`` applies each push immediately
+(Downpour). The TPU adaptation of the same scheme is core/ps.py
+(reduce-scatter/all-gather); solver math is shared via kernels/ref.py's
+``ps_aggregate_ref`` update rules.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class PSShard:
+    """One parameter-server shard: owns a partition of the flat model."""
+
+    def __init__(self, values: np.ndarray, optimizer: str, lr: float,
+                 momentum: float = 0.9, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8):
+        self.values = values.astype(np.float32)
+        self.optimizer = optimizer
+        self.lr = lr
+        self.momentum = momentum
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.m = np.zeros_like(self.values)
+        self.v = np.zeros_like(self.values)
+        self.step = 0
+        self.lock = threading.Lock()
+
+    def apply(self, grad: np.ndarray):
+        """The paper's 'customized aggregation function' applied on the
+        shard owner."""
+        with self.lock:
+            self.step += 1
+            g = grad.astype(np.float32)
+            if self.optimizer == "sgd":
+                self.values -= self.lr * g
+            elif self.optimizer == "momentum":
+                self.m = self.momentum * self.m + g
+                self.values -= self.lr * self.m
+            elif self.optimizer == "adam":
+                self.m = self.b1 * self.m + (1 - self.b1) * g
+                self.v = self.b2 * self.v + (1 - self.b2) * g * g
+                mh = self.m / (1 - self.b1 ** self.step)
+                vh = self.v / (1 - self.b2 ** self.step)
+                self.values -= self.lr * mh / (np.sqrt(vh) + self.eps)
+            elif self.optimizer == "average":
+                # model averaging: grad slot carries the mean weights
+                self.values = g
+            elif self.optimizer == "easgd":
+                self.values += g      # grad slot carries beta * mean diff
+            else:
+                raise ValueError(self.optimizer)
+
+    def read(self) -> np.ndarray:
+        with self.lock:
+            return self.values.copy()
+
+
+class SoftwareParameterServer:
+    def __init__(self, init_flat: np.ndarray, *, n_shards: int = 4,
+                 n_learners: int = 1, optimizer: str = "sgd",
+                 lr: float = 0.1, trigger: str = "bsp"):
+        assert trigger in ("bsp", "on_arrival")
+        self.n_learners = n_learners
+        self.trigger = trigger
+        self.size = init_flat.size
+        pad = (-init_flat.size) % n_shards
+        flat = np.pad(init_flat.astype(np.float32), (0, pad))
+        self.shard_len = flat.size // n_shards
+        self.shards = [PSShard(flat[i * self.shard_len:(i + 1)
+                                    * self.shard_len], optimizer, lr)
+                       for i in range(n_shards)]
+        self._members: set = set()
+        self._lock = threading.Lock()
+        self._bsp_buf: List[np.ndarray] = []
+        self._bsp_cond = threading.Condition()
+        self._bsp_round = 0
+        self.push_count = 0
+        self.bytes_moved = 0
+
+    # ---- connection management (paper: join/leave) ------------------------
+    def join(self, learner_id: int):
+        with self._lock:
+            self._members.add(learner_id)
+
+    def leave(self, learner_id: int):
+        with self._lock:
+            self._members.discard(learner_id)
+            # a crashed learner must not deadlock a BSP barrier
+        with self._bsp_cond:
+            self._bsp_cond.notify_all()
+
+    @property
+    def active(self) -> int:
+        with self._lock:
+            return len(self._members)
+
+    # ---- push / pull ---------------------------------------------------------
+    def _partition(self, flat: np.ndarray) -> List[np.ndarray]:
+        pad = (-flat.size) % (self.shard_len * len(self.shards))
+        f = np.pad(flat.astype(np.float32), (0, pad))
+        return [f[i * self.shard_len:(i + 1) * self.shard_len]
+                for i in range(len(self.shards))]
+
+    def push(self, learner_id: int, flat: np.ndarray, timeout: float = 30.0):
+        """Send locally accumulated gradients (or weights, per solver)."""
+        self.push_count += 1
+        self.bytes_moved += flat.nbytes
+        if self.trigger == "on_arrival":          # Downpour
+            for shard, part in zip(self.shards, self._partition(flat)):
+                shard.apply(part)
+            return
+        # BSP: wait until all ACTIVE learners contributed, then aggregate
+        with self._bsp_cond:
+            my_round = self._bsp_round
+            self._bsp_buf.append(flat.astype(np.float32))
+            if len(self._bsp_buf) >= max(1, self.active):
+                mean = np.mean(self._bsp_buf, axis=0)
+                for shard, part in zip(self.shards, self._partition(mean)):
+                    shard.apply(part)
+                self._bsp_buf = []
+                self._bsp_round += 1
+                self._bsp_cond.notify_all()
+            else:
+                self._bsp_cond.wait_for(
+                    lambda: self._bsp_round != my_round
+                    or len(self._bsp_buf) >= max(1, self.active),
+                    timeout=timeout)
+                # if members left, a later pusher completes the round
+                if self._bsp_round == my_round and \
+                        len(self._bsp_buf) >= max(1, self.active):
+                    mean = np.mean(self._bsp_buf, axis=0)
+                    for shard, part in zip(self.shards,
+                                           self._partition(mean)):
+                        shard.apply(part)
+                    self._bsp_buf = []
+                    self._bsp_round += 1
+                    self._bsp_cond.notify_all()
+
+    def pull(self, learner_id: int) -> np.ndarray:
+        """Fetch global weights (concatenated shard partitions)."""
+        out = np.concatenate([s.read() for s in self.shards])
+        self.bytes_moved += out.nbytes
+        return out[: self.size]

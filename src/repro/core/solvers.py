@@ -1,0 +1,212 @@
+"""DLaaS optimization solvers (paper §Parameter Server).
+
+The paper's PS offers "several optimization solvers, including parallel
+stochastic gradient descent (PSGD), elastic averaging SGD, and model
+averaging, to allow different models to select the most efficient parameter
+refinement function", with aggregation triggers ranging from BSP (wait for
+all partitions) to Downpour (apply on arrival). All four are implemented
+over the push/pull primitives in core/ps.py:
+
+  psgd      BSP synchronous SGD: push grads every step, server update,
+            pull. (comm_every forced to 1.)
+  modelavg  H local steps, then weight averaging (BSP trigger with the
+            paper's "communicates with the PS after N batches" threshold).
+  easgd     H local steps, elastic force toward/from the center.
+  downpour  H local steps accumulating grads; server applies each
+            learner's push sequentially (arrival order), learners pull
+            their arrival-prefix params (staleness-faithful simulation).
+
+One ``round`` = one jitted call = H local microsteps + one sync.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import ps
+from repro.core.compression import (BLOCK, compress_with_feedback,
+                                    pad_to_block, wire_bytes)
+from repro.optim.optimizers import OptConfig, flat_init, flat_update
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    name: str = "psgd"            # psgd | modelavg | easgd | downpour
+    comm_every: int = 1           # H: paper's communication-frequency thresh
+    push_mode: str = "ps"         # ps (reduce-scatter) | broadcast (O(L^2))
+    compress: bool = False        # int8 push compression w/ error feedback
+    local_lr: float = 0.1         # lr for local steps (modelavg/easgd/downpour)
+    easgd_alpha: float = 0.1      # elastic force on learners
+    easgd_beta: float = 0.9       # center pull strength (beta/NL per learner)
+
+    @property
+    def rounds_h(self) -> int:
+        return 1 if self.name == "psgd" else self.comm_every
+
+
+class Solver:
+    """Functional solver: holds the jitted round step + state conventions.
+
+    state = {
+      center: (F,) flat params (sharded over the data axis in ps mode),
+      local:  (NL, F) learner-local params (easgd only),
+      opt:    flat optimizer state (psgd/downpour server updates),
+      err:    (NL, F) error-feedback buffers (compress only),
+      round:  scalar int32,
+    }
+    """
+
+    def __init__(self, loss_fn: Callable, params_template,
+                 opt_cfg: OptConfig, scfg: SolverConfig,
+                 n_learners: int, mesh=None):
+        self.scfg = scfg
+        self.opt_cfg = opt_cfg
+        self.n_learners = n_learners
+        self.ctx = ps.PSContext(mesh=mesh, n_learners=n_learners)
+        flat, unravel = ravel_pytree(params_template)
+        self.true_size = flat.size
+        self.padded = max(pad_to_block(self.true_size, BLOCK * n_learners),
+                          BLOCK * n_learners)
+        self.unravel = unravel
+        self._round_jit = jax.jit(self._round)
+
+    # ---- state --------------------------------------------------------------
+    def init_state(self, params) -> Dict[str, Any]:
+        flat, _ = ravel_pytree(params)
+        flat = jnp.pad(flat.astype(jnp.float32),
+                       (0, self.padded - self.true_size))
+        s: Dict[str, Any] = {"center": flat,
+                             "round": jnp.zeros((), jnp.int32)}
+        if self.scfg.name in ("psgd", "downpour"):
+            s["opt"] = flat_init(self.opt_cfg, self.padded)
+        if self.scfg.name == "easgd":
+            s["local"] = jnp.tile(flat[None], (self.n_learners, 1))
+        if self.scfg.compress:
+            s["err"] = jnp.zeros((self.n_learners, self.padded), jnp.float32)
+        return s
+
+    def params_of(self, state) -> Any:
+        return self.unravel(state["center"][: self.true_size])
+
+    # ---- round --------------------------------------------------------------
+    def _round(self, state, batches):
+        """batches: pytree, leaves (H, NL, b, ...)."""
+        scfg = self.scfg
+        ctx = self.ctx
+        nl = self.n_learners
+        unr = self.unravel
+        ts = self.true_size
+
+        def loss_flat(flat, batch):
+            return self._loss_fn(unr(flat[:ts]), batch)
+
+        grad_flat = jax.value_and_grad(loss_flat)
+
+        def sgd_local_steps(x0_stack, batches):
+            """x0_stack (NL,F); batches leaves (H,NL,b..). H plain-SGD steps
+            per learner; returns (x_stack, grad_accum_stack, mean_loss)."""
+            def step(carry, mb):
+                xs, gacc, lacc = carry
+                losses, grads = jax.vmap(grad_flat)(xs, mb)
+                xs = xs - scfg.local_lr * grads
+                return (xs, gacc + grads, lacc + jnp.mean(losses)), None
+            h = jax.tree.leaves(batches)[0].shape[0]
+            init = (x0_stack, jnp.zeros_like(x0_stack),
+                    jnp.zeros((), jnp.float32))
+            (xs, gacc, lacc), _ = jax.lax.scan(
+                step, init,
+                jax.tree.map(lambda b: b, batches))
+            return xs, gacc, lacc / h
+
+        def maybe_compress(vstack, state, new_state):
+            if not scfg.compress:
+                return vstack, new_state
+            err = state["err"]
+            qs, scales, new_err, wire = jax.vmap(
+                lambda v, e: compress_with_feedback(v, e))(vstack, err)
+            new_state["err"] = new_err
+            return wire, new_state
+
+        new_state = {"round": state["round"] + 1}
+        update_fn = partial(flat_update, self.opt_cfg)
+
+        if scfg.name == "psgd":
+            full = ps.pull(state["center"], ctx)
+            fl_stack = jnp.tile(full[None], (nl, 1))
+            # one step: grads per learner on shared params
+            mb = jax.tree.map(lambda b: b[0], batches)   # (NL, b, ...)
+            losses, grads = jax.vmap(grad_flat)(fl_stack, mb)
+            grads, new_state = maybe_compress(grads, state, new_state)
+            center, opt, _ = ps.push_update_pull(
+                grads, state["center"], state["opt"], update_fn,
+                scfg.push_mode, ctx)
+            new_state.update(center=center, opt=opt)
+            return new_state, {"loss": jnp.mean(losses)}
+
+        if scfg.name == "modelavg":
+            full = ps.pull(state["center"], ctx)
+            x0 = jnp.tile(full[None], (nl, 1))
+            xs, _, loss = sgd_local_steps(x0, batches)
+            push, new_state = maybe_compress(xs, state, new_state)
+            mean = ps.push_mean(push, scfg.push_mode, ctx)
+            center = self._scatter_like(mean, state["center"], ctx)
+            new_state.update(center=center)
+            return new_state, {"loss": loss}
+
+        if scfg.name == "easgd":
+            full = ps.pull(state["center"], ctx)
+            xs, _, loss = sgd_local_steps(state["local"], batches)
+            diffs = xs - full[None]
+            push, new_state = maybe_compress(diffs, state, new_state)
+            mean_diff = ps.push_mean(push, scfg.push_mode, ctx)
+            xs = xs - scfg.easgd_alpha * diffs
+            center_full = full + scfg.easgd_beta * mean_diff
+            center = self._scatter_like(center_full, state["center"], ctx)
+            new_state.update(center=center, local=xs)
+            return new_state, {"loss": loss,
+                               "divergence": jnp.mean(jnp.abs(diffs))}
+
+        if scfg.name == "downpour":
+            full = ps.pull(state["center"], ctx)
+            x0 = jnp.tile(full[None], (nl, 1))
+            _, gacc, loss = sgd_local_steps(x0, batches)
+            push, new_state = maybe_compress(gacc, state, new_state)
+            center, opt, prefixes = ps.downpour_round(
+                push, state["center"], state["opt"], update_fn, ctx)
+            # staleness metric: distance between first and last arrival view
+            stale = jnp.mean(jnp.abs(prefixes[-1] - prefixes[0]))
+            new_state.update(center=center, opt=opt)
+            return new_state, {"loss": loss, "staleness": stale}
+
+        raise ValueError(scfg.name)
+
+    def _scatter_like(self, full, center_ref, ctx):
+        """Store a full vector into the center's (possibly sharded) layout."""
+        return full.reshape(center_ref.shape)
+
+    # ---- public -------------------------------------------------------------
+    def round(self, state, batches):
+        return self._round_jit(state, batches)
+
+    def wire_bytes_per_round(self) -> int:
+        """Analytic bytes moved per learner per round (for the bench)."""
+        f = self.padded
+        nl = self.n_learners
+        per_vec = wire_bytes(f) if self.scfg.compress else 4 * f
+        if self.scfg.push_mode == "broadcast":
+            return (nl - 1) * per_vec + (4 * f if self.scfg.name in
+                                         ("psgd", "downpour") else 0)
+        # ps: push RS ~ (L-1)/L * vec, pull AG ~ (L-1)/L * vec (f32)
+        return int((nl - 1) / nl * (per_vec + 4 * f))
+
+
+def make_solver(loss_fn, params_template, opt_cfg: OptConfig,
+                scfg: SolverConfig, n_learners: int, mesh=None) -> Solver:
+    s = Solver(loss_fn, params_template, opt_cfg, scfg, n_learners, mesh)
+    s._loss_fn = loss_fn
+    return s

@@ -1,0 +1,256 @@
+"""Distribution context and sharding policy.
+
+``Dist`` carries the mesh + policy knobs through model code. When
+``mesh is None`` (smoke tests, single CPU) every constraint is a no-op and
+shard_map paths fall back to single-device code.
+
+Axes (fixed by the assignment):
+  single-pod: (16, 16)        ("data", "model")
+  multi-pod:  (2, 16, 16)     ("pod", "data", "model")
+
+Policies:
+  dp_only  — paper-faithful learners: full model replica per data shard,
+             PS sync over the data axis (small archs only).
+  tp_dp    — tensor-parallel over "model", replicated over data (paper-
+             faithful at scale: each learner = one model-parallel group).
+  fsdp_tp  — beyond-paper: params/optimizer additionally sharded over the
+             data (and optionally pod) axis — the paper's PS partition
+             scheme promoted to a resident layout (ZeRO lineage).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Dist:
+    mesh: Optional[Mesh] = None
+    policy: str = "fsdp_tp"          # dp_only | tp_dp | fsdp_tp
+    fsdp_over_pod: bool = True       # include "pod" in the FSDP axis set
+    # Serving knobs
+    seq_shard_cache: bool = False    # shard KV cache seq dim (long-context)
+    # Resolved batch axes for the current step's global batch (None when the
+    # batch dim is not divisible by the data axes, e.g. long_500k B=1).
+    batch_axes_resolved: Optional[Tuple[str, ...]] = None
+
+    # ---- axis helpers -----------------------------------------------------
+    @property
+    def has_mesh(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def has_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+    @property
+    def batch_axes(self):
+        if not self.has_mesh:
+            return None
+        if self.batch_axes_resolved is not None:
+            return self.batch_axes_resolved or None
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    def resolve_batch(self, global_batch: int) -> "Dist":
+        """Pick the largest batch-sharding axis set that divides B."""
+        if not self.has_mesh:
+            return self
+        cands = []
+        if self.has_pod:
+            cands.append(("pod", "data"))
+        cands.append(("data",))
+        for bt in cands:
+            n = 1
+            for a in bt:
+                n *= self.axis_size(a)
+            if global_batch % n == 0:
+                return replace(self, batch_axes_resolved=bt)
+        return replace(self, batch_axes_resolved=())
+
+    @property
+    def fsdp_axes(self):
+        """Axes over which params/opt-state are sharded (beyond TP)."""
+        if not self.has_mesh or self.policy in ("dp_only", "tp_dp"):
+            return None
+        base = ("pod", "data") if (self.has_pod and self.fsdp_over_pod) \
+            else ("data",)
+        if self.policy == "zero3_sp":
+            # model axis carries no TP: fold it into the FSDP axis set
+            return base + ("model",)
+        return base
+
+    @property
+    def tp_axis(self):
+        if not self.has_mesh or self.policy in ("dp_only", "zero3_sp"):
+            return None
+        return "model"
+
+    @property
+    def expert_axis(self):
+        """MoE expert-parallel axis (kept even in zero3_sp: experts stay
+        on "model" so dispatch is a model-axis all_to_all)."""
+        if not self.has_mesh or self.policy == "dp_only":
+            return None
+        return "model"
+
+    @property
+    def seq_parallel(self) -> bool:
+        """zero3_sp: activations are sequence-sharded over "model"
+        (Megatron-SP residual stream; attention runs in a shard_map with
+        gathered k/v; weights are gathered FSDP-style)."""
+        return self.policy == "zero3_sp" and self.has_mesh
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        if self.has_mesh:
+            n = self.axis_size("data")
+            if self.has_pod:
+                n *= self.axis_size("pod")
+        return n
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size("model") if self.has_mesh else 1
+
+    # ---- constraint helpers ----------------------------------------------
+    def constrain(self, x, spec: P):
+        """with_sharding_constraint that is a no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    # activations: (B, S, D)
+    def act_spec(self, seq_over_model: bool = False) -> P:
+        if not self.has_mesh:
+            return P()
+        return P(self.batch_axes, "model" if seq_over_model else None, None)
+
+    def local(self) -> "Dist":
+        """Dist with no mesh (inside shard_map bodies)."""
+        return replace(self, mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+# Params are pytrees of arrays whose dims carry *logical names*; we map a
+# (path, ndim) to a PartitionSpec via the rules below. Logical names:
+#   layers  — scan-over-layers leading dim (never sharded)
+#   vocab   — vocabulary dim -> TP axis
+#   embed   — d_model dim -> FSDP axes
+#   heads   — attention heads -> TP axis
+#   kv      — kv heads (replicated; kv < 16 for most archs)
+#   ff      — mlp hidden -> TP axis
+#   expert  — MoE expert dim -> TP ("model") axis (expert parallelism)
+#   eff     — per-expert hidden -> FSDP axes (experts already take TP)
+#   conv/state/heads_ssm — mamba dims
+#
+# Each param is annotated at construction time (models attach .dim_names via
+# the DIMS registry keyed by param path).
+
+from typing import Dict
+
+# map logical dim name -> which axis set it takes
+def _dim_axis(dist: Dist, name: str):
+    if name == "expert":
+        return dist.expert_axis
+    if name == "vocab":
+        # vocab stays model-sharded in every multi-axis policy (embedding
+        # tables + chunked xent rely on it)
+        return "model" if (dist.has_mesh and dist.policy != "dp_only") \
+            else None
+    if name in ("heads", "ff"):
+        return dist.tp_axis
+    if name in ("embed", "eff", "dinner"):
+        return dist.fsdp_axes
+    return None
+
+
+def _axes_size(dist: Dist, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return dist.axis_size(ax)
+    n = 1
+    for a in ax:
+        n *= dist.axis_size(a)
+    return n
+
+
+def spec_for(dist: Dist, dim_names: Tuple[str, ...],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+    """PartitionSpec for a param. Dims whose size is not divisible by the
+    candidate axis set fall back to replication (e.g. whisper's 20 heads or
+    a vocab that 16 does not divide)."""
+    if not dist.has_mesh:
+        return P()
+    used: set = set()
+    parts = []
+    for i, n in enumerate(dim_names):
+        ax = _dim_axis(dist, n)
+        if ax is not None:
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            # drop axes already taken by an earlier dim of this param
+            names = tuple(a for a in names if a not in used)
+            ax = None if not names else (
+                names[0] if len(names) == 1 else names)
+        ok = ax is not None
+        if ok and shape is not None:
+            ok = shape[i] % _axes_size(dist, ax) == 0
+            if not ok and not isinstance(ax, str):
+                # partial fallback: try each single axis, largest first
+                for cand in sorted(
+                        (a for a in ax), key=lambda a: -dist.axis_size(a)):
+                    if shape[i] % dist.axis_size(cand) == 0:
+                        ax = cand
+                        ok = True
+                        break
+        if not ok:
+            parts.append(None)
+        else:
+            names = (ax,) if isinstance(ax, str) else tuple(ax)
+            used.update(names)
+            parts.append(ax)
+    return P(*parts)
+
+
+def tree_specs(dist: Dist, defs) -> Dict:
+    """Map a pytree of ParamDefs to a pytree of PartitionSpecs."""
+    from repro.models.layers import ParamDef  # local import, no cycle at load
+    return jax.tree.map(
+        lambda d: spec_for(dist, d.dims, d.shape),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def tree_shardings(dist: Dist, defs):
+    specs = tree_specs(dist, defs)
+    if not dist.has_mesh:
+        return specs
+    return jax.tree.map(
+        lambda s: NamedSharding(dist.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def dim_shardable(dist: Dist, size: int, name: str = "vocab") -> bool:
+    ax = _dim_axis(dist, name)
+    return (dist.has_mesh and ax is not None
+            and size % _axes_size(dist, ax) == 0)

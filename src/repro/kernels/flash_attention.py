@@ -1,0 +1,103 @@
+"""Pallas TPU flash attention (forward).
+
+Grid (batch·heads, q-blocks, k-blocks); k iterates fastest so the online-
+softmax state (acc, m, l) lives in VMEM scratch and is carried across the
+k dimension. Block shapes are MXU-aligned (block_q x head_dim tiles with
+head_dim padded to a lane multiple by the wrapper when needed).
+
+Layout: the ops.py wrapper folds (B, S, H, hd) -> (B*H, S, hd) so BlockSpec
+tiling is 3-D; GQA arrives pre-repeated (same convention as the jnp
+reference in models/attention.py, which is the oracle: kernels/ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, scale: float, block_q: int, block_k: int,
+                  n_kb: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kb - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False):
+    """q/k/v (BH, S, hd) (same head count, GQA pre-repeated) -> (BH, S, hd)."""
+    bh, sq, hd = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    n_qb, n_kb = sq // block_q, sk // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, n_kb=n_kb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, hd), jnp.float32),    # acc
+            _vmem((block_q,), jnp.float32),       # m (running max)
+            _vmem((block_q,), jnp.float32),       # l (running sum)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,79 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Each wrapper handles layout folding (model layouts -> kernel layouts),
+dtype plumbing, and the TPU/interpret switch: on a TPU backend the Mosaic
+kernel runs; elsewhere ``interpret=True`` executes the kernel body in
+Python (correctness-equivalent, used by tests and CPU smoke)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ps_aggregate as _agg
+from repro.kernels import quantize as _q
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Repeats GQA heads,
+    folds to the kernel layout, unfolds back."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    o = _fa.flash_attention_fwd(fold(q), fold(k), fold(v), causal=causal,
+                                block_q=block_q, block_k=block_k,
+                                interpret=not _on_tpu())
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_log, b, c, *, chunk: int = 128):
+    """Model layout: x (B,S,H,P), dt (B,S,H) post-softplus, a_log (H,),
+    b/c (B,S,G,N). Returns y (B,S,H,P) (no D-skip/gating)."""
+    nb, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xdt = (x.astype(jnp.float32) * dt[..., None]).transpose(0, 2, 1, 3)
+    ldec = (dt * a).transpose(0, 2, 1)[..., None]       # (B,H,S,1)
+    bh_ = jnp.repeat(b, hg, axis=2).transpose(0, 2, 1, 3)
+    ch_ = jnp.repeat(c, hg, axis=2).transpose(0, 2, 1, 3)
+    fold = lambda t: t.reshape((nb * h,) + t.shape[2:])
+    y = _ssd.ssd_scan_fwd(fold(xdt).astype(x.dtype), fold(ldec),
+                          fold(bh_).astype(x.dtype),
+                          fold(ch_).astype(x.dtype),
+                          chunk=chunk, interpret=not _on_tpu())
+    return y.reshape(nb, h, s, p).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("solver", "lr", "b1", "b2", "eps",
+                                   "momentum", "beta", "block"))
+def ps_aggregate(grads, params, m, v, step, *, solver="adam", lr=1e-3,
+                 b1=0.9, b2=0.999, eps=1e-8, momentum=0.9, beta=0.9,
+                 block=1024):
+    return _agg.ps_aggregate(grads, params, m, v, step, solver=solver,
+                             lr=lr, b1=b1, b2=b2, eps=eps,
+                             momentum=momentum, beta=beta, block=block,
+                             interpret=not _on_tpu())
+
+
+@jax.jit
+def quantize_ef(x, err):
+    return _q.quantize_ef(x, err, interpret=not _on_tpu())
+
+
+@jax.jit
+def dequantize(q, scales):
+    return _q.dequantize(q, scales, interpret=not _on_tpu())

@@ -1,0 +1,98 @@
+"""Pallas TPU fused parameter-server shard aggregation + solver update.
+
+The paper calls the PS "a throughput-critical system" whose receiving
+threads aggregate incoming partitions and update global weights. On TPU
+the shard owner's aggregation + optimizer update is HBM-bandwidth-bound;
+fusing mean-aggregation with the (elementwise) solver update makes it a
+single read-modify-write pass over the shard instead of several.
+
+Supports the DLaaS solver updates: sgd, momentum, adam (bias-corrected),
+and the EASGD center rule. Blocks of (n_learners, block) are reduced over
+learners in VMEM.
+
+Oracle: kernels/ref.py:ps_aggregate_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(g_ref, p_ref, m_ref, v_ref, step_ref,
+                po_ref, mo_ref, vo_ref, *,
+                solver: str, lr: float, b1: float, b2: float, eps: float,
+                momentum: float, beta: float):
+    g = jnp.mean(g_ref[...].astype(jnp.float32), axis=0)     # (blk,)
+    p = p_ref[...].astype(jnp.float32)
+    if solver == "sgd":
+        po_ref[...] = (p - lr * g).astype(po_ref.dtype)
+        mo_ref[...] = m_ref[...]
+        vo_ref[...] = v_ref[...]
+    elif solver == "momentum":
+        m = momentum * m_ref[...].astype(jnp.float32) + g
+        po_ref[...] = (p - lr * m).astype(po_ref.dtype)
+        mo_ref[...] = m.astype(mo_ref.dtype)
+        vo_ref[...] = v_ref[...]
+    elif solver == "adam":
+        step = step_ref[0].astype(jnp.float32)
+        m = b1 * m_ref[...].astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v_ref[...].astype(jnp.float32) + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        po_ref[...] = (p - lr * mh / (jnp.sqrt(vh) + eps)).astype(
+            po_ref.dtype)
+        mo_ref[...] = m.astype(mo_ref.dtype)
+        vo_ref[...] = v.astype(vo_ref.dtype)
+    elif solver == "easgd_center":
+        # g_ref holds per-learner (x_i - center) diffs; center += beta*mean
+        po_ref[...] = (p + beta * g).astype(po_ref.dtype)
+        mo_ref[...] = m_ref[...]
+        vo_ref[...] = v_ref[...]
+    else:
+        raise ValueError(solver)
+
+
+def ps_aggregate(grads, params, m, v, step, *, solver: str = "adam",
+                 lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, momentum: float = 0.9,
+                 beta: float = 0.9, block: int = 1024,
+                 interpret: bool = False):
+    """grads (NL, F); params/m/v (F,); step scalar int32 (1-based).
+
+    Returns (new_params, new_m, new_v): one fused aggregation+update pass.
+    """
+    nl, f = grads.shape
+    block = min(block, f)
+    assert f % block == 0
+    nb = f // block
+    kernel = functools.partial(
+        _agg_kernel, solver=solver, lr=lr, b1=b1, b2=b2, eps=eps,
+        momentum=momentum, beta=beta)
+    step_arr = jnp.broadcast_to(
+        jnp.asarray(step, jnp.float32).reshape(1), (1,))
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((nl, block), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f,), params.dtype),
+            jax.ShapeDtypeStruct((f,), m.dtype),
+            jax.ShapeDtypeStruct((f,), v.dtype),
+        ],
+        interpret=interpret,
+    )(grads, params, m, v, step_arr)

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is dry-run-only (smoke tests and benches see the real 1 device).
+
+r"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — bytes per device (does it fit?)
+  * compiled.cost_analysis()    — XLA's flop/byte counts (scan bodies
+                                  counted ONCE; cross-check column only)
+  * the post-SPMD HLO text (gzipped) — input to analysis/roofline.py,
+    which recovers true per-step FLOPs/bytes/collective-bytes with
+    while-loop trip-count multiplication.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES_BY_NAME, shapes_for, skip_reason
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.distributed.sharding import Dist
+from repro.distributed.steps import (abstract_inputs, default_optimizer,
+                                     jit_decode_step, jit_prefill_step,
+                                     jit_train_step)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import make_model
+from repro.optim.optimizers import OptConfig
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, *,
+             policy: str = "fsdp_tp", remat: str = "full",
+             grad_accum: int = 1, opt_name: str = "",
+             save_hlo: bool = True, out_dir: Path = RESULTS,
+             tag: str = "") -> dict:
+    cfg = get_arch(arch_id)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "policy": policy, "remat": remat, "grad_accum": grad_accum,
+           "tag": tag}
+    skip = skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    dist = Dist(mesh=mesh, policy=policy).resolve_batch(shape.global_batch)
+    opts = {"remat": remat}
+    model = make_model(cfg, dist, opts)
+    opt_cfg = (OptConfig(name=opt_name) if opt_name
+               else default_optimizer(cfg))
+    rec["optimizer"] = opt_cfg.name
+    rec["n_params"] = cfg.n_params()
+    rec["n_active_params"] = cfg.n_active_params()
+
+    if shape.kind == "train":
+        step = jit_train_step(model, opt_cfg, shape, grad_accum)
+    elif shape.kind == "prefill":
+        step = jit_prefill_step(model, shape)
+    else:
+        step = jit_decode_step(model, shape)
+    args = abstract_inputs(model, shape, opt_cfg)
+
+    t0 = time.time()
+    lowered = step.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            rec[f] = int(getattr(ma, f, 0) or 0)
+        rec["peak_bytes_per_device"] = (
+            rec.get("argument_size_in_bytes", 0)
+            - rec.get("alias_size_in_bytes", 0)
+            + rec.get("output_size_in_bytes", 0)
+            + rec.get("temp_size_in_bytes", 0))
+    ca = compiled.cost_analysis()
+    if ca:
+        rec["xla_flops"] = float(ca.get("flops", 0.0))
+        rec["xla_bytes"] = float(ca.get("bytes accessed", 0.0))
+
+    if save_hlo:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        hp = out_dir / f"{arch_id}__{shape_name}__{mesh_name}{suffix}.hlo.gz"
+        with gzip.open(hp, "wt") as f:
+            f.write(compiled.as_text())
+        rec["hlo"] = str(hp)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default="fsdp_tp")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = list(ARCH_IDS) if (args.all or not args.arch) \
+        else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        cfg = get_arch(a)
+        shs = ([SHAPES_BY_NAME[s] for s in args.shape.split(",")]
+               if args.shape else list(shapes_for(cfg)))
+        for s in shs:
+            for m in meshes:
+                cells.append((a, s.name, m))
+
+    for a, s, m in cells:
+        key = f"{a}__{s}__{m}" + (f"__{args.tag}" if args.tag else "")
+        jp = out_dir / f"{key}.json"
+        try:
+            rec = run_cell(a, s, m, policy=args.policy, remat=args.remat,
+                           grad_accum=args.grad_accum,
+                           opt_name=args.optimizer,
+                           save_hlo=not args.no_hlo, out_dir=out_dir,
+                           tag=args.tag)
+        except Exception as e:  # record, keep sweeping
+            rec = {"arch": a, "shape": s, "mesh": m, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-3000:]}
+        jp.write_text(json.dumps(rec, indent=1))
+        msg = {k: v for k, v in rec.items() if k not in ("trace", "hlo")}
+        print(json.dumps(msg), flush=True)
+
+
+if __name__ == "__main__":
+    main()

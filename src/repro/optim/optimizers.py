@@ -1,0 +1,225 @@
+"""Optimizers: tree-based (AdamW, Adafactor, SGD-momentum) for the
+pjit/FSDP path, and flat elementwise variants for the parameter-server
+shard path (the PS aggregates flat partitions — see core/ps.py).
+
+Tree optimizer states inherit the parameter sharding (ZeRO: each state
+leaf carries the same PartitionSpec as its param leaf; Adafactor factored
+stats drop the last dim's spec entry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor | momentum | sgd
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    # adafactor
+    decay: float = 0.8
+    min_dim_factored: int = 128
+    state_dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# Tree optimizers
+# ---------------------------------------------------------------------------
+
+
+def _factored_dims(shape) -> Optional[Tuple[int, int]]:
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def init_opt_state(cfg: OptConfig, params) -> Dict[str, Any]:
+    sd = jnp.dtype(cfg.state_dtype)
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "momentum":
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)}
+    if cfg.name == "adamw":
+        z = lambda p: jnp.zeros(p.shape, sd)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+    if cfg.name == "adafactor":
+        def vr(p):
+            f = _factored_dims(p.shape)
+            if f is None or min(p.shape[-2:]) < cfg.min_dim_factored:
+                return jnp.zeros(p.shape, sd)
+            r, c = f
+            return jnp.zeros(p.shape[:-1], sd)          # row stats
+
+        def vc(p):
+            f = _factored_dims(p.shape)
+            if f is None or min(p.shape[-2:]) < cfg.min_dim_factored:
+                return jnp.zeros((0,), sd)               # unused marker
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], sd)
+        return {"step": jnp.zeros((), jnp.int32),
+                "vr": jax.tree.map(vr, params),
+                "vc": jax.tree.map(vc, params)}
+    raise ValueError(cfg.name)
+
+
+def abstract_opt_state(cfg: OptConfig, abstract_params):
+    return jax.eval_shape(lambda p: init_opt_state(cfg, p), abstract_params)
+
+
+def opt_state_specs(cfg: OptConfig, param_defs, dist):
+    """PartitionSpecs for the optimizer state, derived from param defs so
+    factored Adafactor stats get shape-consistent specs."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import spec_for
+    from repro.models.layers import ParamDef, is_pdef
+    scalar = P()
+    full = lambda: jax.tree.map(
+        lambda d: spec_for(dist, d.dims, d.shape), param_defs,
+        is_leaf=is_pdef)
+    if cfg.name == "sgd":
+        return {"step": scalar}
+    if cfg.name == "momentum":
+        return {"step": scalar, "m": full()}
+    if cfg.name == "adamw":
+        return {"step": scalar, "m": full(), "v": full()}
+    if cfg.name == "adafactor":
+        def fac(d: ParamDef, which: str):
+            factored = (len(d.shape) >= 2
+                        and min(d.shape[-2:]) >= cfg.min_dim_factored)
+            if not factored:
+                if which == "vr":
+                    return spec_for(dist, d.dims, d.shape)
+                return P()           # vc is a (0,) marker
+            if which == "vr":
+                return spec_for(dist, d.dims[:-1], d.shape[:-1])
+            return spec_for(dist, d.dims[:-2] + d.dims[-1:],
+                            d.shape[:-2] + d.shape[-1:])
+        vr = jax.tree.map(lambda d: fac(d, "vr"), param_defs, is_leaf=is_pdef)
+        vc = jax.tree.map(lambda d: fac(d, "vc"), param_defs, is_leaf=is_pdef)
+        return {"step": scalar, "vr": vr, "vc": vc}
+    raise ValueError(cfg.name)
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """One optimizer step; returns (new_params, new_state)."""
+    step = state["step"] + 1
+    lr = cfg.lr
+
+    if cfg.name == "sgd":
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, {"step": step}
+
+    if cfg.name == "momentum":
+        def upd(p, g, m):
+            m = cfg.momentum * m + g.astype(m.dtype)
+            return ((p.astype(jnp.float32) - lr * m).astype(p.dtype), m)
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new, {"step": step, "m": m}
+
+    if cfg.name == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(m.dtype)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * pf)
+            return (pf.astype(p.dtype), m, v)
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"step": step, "m": pick(1), "v": pick(2)}
+
+    if cfg.name == "adafactor":
+        beta = 1 - (step.astype(jnp.float32)) ** -cfg.decay
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            factored = vc.size > 0 and vr.shape != p.shape
+            if factored:
+                vr_n = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_n = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr_n / jnp.mean(vr_n, axis=-1, keepdims=True)
+                prec = rfac[..., None] * vc_n[..., None, :]
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                prec = vr_n
+            u = g * jax.lax.rsqrt(prec + 1e-30)
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            pf = p.astype(jnp.float32) - lr * u
+            if cfg.weight_decay:
+                pf = pf - lr * cfg.weight_decay * p.astype(jnp.float32)
+            return (pf.astype(p.dtype), vr_n, vc_n)
+        out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"step": step, "vr": pick(1), "vc": pick(2)}
+
+    raise ValueError(cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# Flat (parameter-server shard) optimizers — elementwise only
+# ---------------------------------------------------------------------------
+
+
+def flat_init(cfg: OptConfig, n: int):
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "momentum":
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jnp.zeros((n,), jnp.float32)}
+    if cfg.name == "adamw":
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jnp.zeros((n,), jnp.float32),
+                "v": jnp.zeros((n,), jnp.float32)}
+    raise ValueError(f"PS-shard path needs an elementwise optimizer, "
+                     f"got {cfg.name}")
+
+
+def flat_update(cfg: OptConfig, flat_p, flat_g, state):
+    """Elementwise update on a flat shard (runs on the PS shard owner)."""
+    step = state["step"] + 1
+    g = flat_g.astype(jnp.float32)
+    p = flat_p.astype(jnp.float32)
+    if cfg.name == "sgd":
+        return (p - cfg.lr * g).astype(flat_p.dtype), {"step": step}
+    if cfg.name == "momentum":
+        m = cfg.momentum * state["m"] + g
+        return (p - cfg.lr * m).astype(flat_p.dtype), {"step": step, "m": m}
+    if cfg.name == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        m = cfg.b1 * state["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"] + (1 - cfg.b2) * g * g
+        p = p - cfg.lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return p.astype(flat_p.dtype), {"step": step, "m": m, "v": v}
+    raise ValueError(cfg.name)

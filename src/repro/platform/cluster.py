@@ -1,0 +1,317 @@
+"""Simulated cluster + Mesos/Marathon-style scheduler (paper §Platform
+Services), with the GPU health checking the paper lists as future work.
+
+The datacenter is simulated (nodes, GPUs, failures); the scheduling logic,
+state machines, retries and health checks are real code under test. Time
+advances via ``tick()`` so tests are deterministic; the REST service runs
+a background ticker thread.
+
+Reproduces — and then fixes — the colloquium incident: "GPUs of one of the
+machines became unresponsive but our resource manager failed to recognize
+this fact and kept scheduling jobs to this node ... a few jobs failed to
+start". With ``health_checks=False`` the scheduler behaves like the paper's
+system (tasks placed on a bad node fail to start); with ``True`` the
+HealthChecker drains the node first.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class Resources:
+    cpus: float = 1.0
+    gpus: int = 0
+    memory_mb: int = 1024
+
+    def fits(self, other: "Resources") -> bool:
+        return (self.cpus <= other.cpus and self.gpus <= other.gpus
+                and self.memory_mb <= other.memory_mb)
+
+    def sub(self, other: "Resources"):
+        self.cpus -= other.cpus
+        self.gpus -= other.gpus
+        self.memory_mb -= other.memory_mb
+
+    def add(self, other: "Resources"):
+        self.cpus += other.cpus
+        self.gpus += other.gpus
+        self.memory_mb += other.memory_mb
+
+
+@dataclass
+class Node:
+    name: str
+    capacity: Resources
+    free: Resources = None
+    alive: bool = True
+    draining: bool = False
+    gpu_responsive: bool = True        # the colloquium failure mode
+
+    def __post_init__(self):
+        if self.free is None:
+            self.free = Resources(self.capacity.cpus, self.capacity.gpus,
+                                  self.capacity.memory_mb)
+
+
+# task states (Marathon-like)
+STAGING, STARTING, RUNNING, FINISHED, FAILED, KILLED, LOST = (
+    "TASK_STAGING", "TASK_STARTING", "TASK_RUNNING", "TASK_FINISHED",
+    "TASK_FAILED", "TASK_KILLED", "TASK_LOST")
+
+
+@dataclass
+class Task:
+    task_id: str
+    app_id: str
+    resources: Resources
+    state: str = STAGING
+    node: Optional[str] = None
+    restarts: int = 0
+    message: str = ""
+    # run(task) -> None executes the workload (learner thread entry)
+    run: Optional[Callable] = None
+
+
+@dataclass
+class App:
+    """A Marathon 'app': N identical tasks (e.g. the learners of a job)."""
+    app_id: str
+    resources: Resources
+    count: int
+    max_restarts: int = 3
+    tasks: Dict[str, Task] = field(default_factory=dict)
+    on_state: Optional[Callable[[Task], None]] = None
+    run: Optional[Callable] = None
+
+
+class Cluster:
+    def __init__(self, nodes: List[Node]):
+        self.nodes: Dict[str, Node] = {n.name: n for n in nodes}
+        self._lock = threading.RLock()
+
+    # ---- fault injection --------------------------------------------------
+    def fail_node(self, name: str):
+        with self._lock:
+            self.nodes[name].alive = False
+
+    def recover_node(self, name: str):
+        with self._lock:
+            n = self.nodes[name]
+            n.alive = True
+            n.draining = False
+            n.free = Resources(n.capacity.cpus, n.capacity.gpus,
+                               n.capacity.memory_mb)
+
+    def make_gpu_unresponsive(self, name: str):
+        with self._lock:
+            self.nodes[name].gpu_responsive = False
+
+    # ---- allocation ---------------------------------------------------------
+    def allocate(self, res: Resources, *,
+                 schedulable: Callable[[Node], bool]) -> Optional[str]:
+        with self._lock:
+            # best-fit: fewest free GPUs that still fit (bin packing)
+            cands = [n for n in self.nodes.values()
+                     if n.alive and not n.draining and res.fits(n.free)
+                     and schedulable(n)]
+            if not cands:
+                return None
+            cands.sort(key=lambda n: (n.free.gpus, n.free.cpus))
+            node = cands[0]
+            node.free.sub(res)
+            return node.name
+
+    def release(self, name: str, res: Resources):
+        with self._lock:
+            if name in self.nodes:
+                self.nodes[name].free.add(res)
+
+    def idle_fraction(self) -> float:
+        with self._lock:
+            tot = sum(n.capacity.gpus for n in self.nodes.values()) or 1
+            free = sum(n.free.gpus for n in self.nodes.values()
+                       if n.alive and not n.draining)
+            return free / tot
+
+
+class HealthChecker:
+    """Probes GPU responsiveness and drains bad nodes — the fix for the
+    paper's admitted gap ('we are working to periodically check the GPU
+    status and take the node offline')."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.events: List[str] = []
+
+    def probe(self):
+        for n in self.cluster.nodes.values():
+            if n.alive and not n.gpu_responsive and not n.draining:
+                n.draining = True
+                self.events.append(f"drained {n.name}: unresponsive GPU")
+
+
+class Scheduler:
+    """Marathon-style app/task manager over the cluster."""
+
+    def __init__(self, cluster: Cluster, *, health_checks: bool = True):
+        self.cluster = cluster
+        self.health = HealthChecker(cluster) if health_checks else None
+        self.apps: Dict[str, App] = {}
+        self._pending: List[Task] = []
+        self._seq = itertools.count()
+        self._lock = threading.RLock()
+        self._threads: Dict[str, threading.Thread] = {}
+
+    # ---- submission -----------------------------------------------------
+    def submit(self, app: App) -> App:
+        with self._lock:
+            self.apps[app.app_id] = app
+            for i in range(app.count):
+                t = Task(task_id=f"{app.app_id}.{i}", app_id=app.app_id,
+                         resources=app.resources, run=app.run)
+                app.tasks[t.task_id] = t
+                self._pending.append(t)
+        return app
+
+    def kill_app(self, app_id: str):
+        with self._lock:
+            app = self.apps.get(app_id)
+            if not app:
+                return
+            for t in app.tasks.values():
+                if t.state in (STAGING, STARTING, RUNNING):
+                    self._set_state(t, KILLED, "killed by user/LCM")
+                    if t.node:
+                        self.cluster.release(t.node, t.resources)
+                        t.node = None
+            self._pending = [t for t in self._pending
+                             if t.app_id != app_id]
+
+    # ---- state machine ----------------------------------------------------
+    def _set_state(self, t: Task, state: str, msg: str = ""):
+        t.state = state
+        t.message = msg
+        app = self.apps.get(t.app_id)
+        if app and app.on_state:
+            try:
+                app.on_state(t)
+            except Exception:
+                pass
+
+    def task_failed(self, task_id: str, msg: str = "",
+                    user_error: bool = False):
+        """Report a task failure. User errors are NOT restarted (paper:
+        'restarts failed jobs but not when the job fails due to ... an
+        error in the code')."""
+        with self._lock:
+            t = self._find(task_id)
+            if t is None:
+                return
+            if t.node:
+                self.cluster.release(t.node, t.resources)
+                t.node = None
+            self._set_state(t, FAILED, msg)
+            app = self.apps[t.app_id]
+            if not user_error and t.restarts < app.max_restarts:
+                t.restarts += 1
+                self._set_state(t, STAGING, f"restart #{t.restarts}")
+                self._pending.append(t)
+
+    def task_finished(self, task_id: str):
+        with self._lock:
+            t = self._find(task_id)
+            if t is None:
+                return
+            if t.node:
+                self.cluster.release(t.node, t.resources)
+                t.node = None
+            self._set_state(t, FINISHED)
+
+    def _find(self, task_id: str) -> Optional[Task]:
+        for app in self.apps.values():
+            if task_id in app.tasks:
+                return app.tasks[task_id]
+        return None
+
+    # ---- scheduling tick ---------------------------------------------------
+    def tick(self):
+        """One scheduling round: health probe, node-failure detection,
+        pending placement."""
+        with self._lock:
+            if self.health:
+                self.health.probe()
+            # detect lost tasks on dead nodes -> reschedule (paper: 'if a
+            # node fails, the cluster manager automatically restarts the
+            # jobs on that node on a different node')
+            for app in self.apps.values():
+                for t in app.tasks.values():
+                    if t.state == RUNNING and t.node and \
+                            not self.cluster.nodes[t.node].alive:
+                        self.cluster.release(t.node, t.resources)
+                        t.node = None
+                        self._set_state(t, LOST, "node failed")
+                        if t.restarts < app.max_restarts:
+                            t.restarts += 1
+                            self._set_state(t, STAGING,
+                                            f"restart #{t.restarts}")
+                            self._pending.append(t)
+            still = []
+            for t in self._pending:
+                if t.state != STAGING:
+                    continue
+                res = t.resources
+                need_gpu = res.gpus > 0
+                node = self.cluster.allocate(
+                    res, schedulable=lambda n: True)
+                if node is None:
+                    still.append(t)
+                    continue
+                t.node = node
+                nd = self.cluster.nodes[node]
+                if need_gpu and not nd.gpu_responsive:
+                    # the colloquium incident: placed on a bad node, the
+                    # container cannot initialize its GPUs
+                    self.cluster.release(node, res)
+                    t.node = None
+                    self._set_state(t, FAILED,
+                                    "GPUs unresponsive on node " + node)
+                    continue
+                self._set_state(t, STARTING)
+                self._launch(t)
+            self._pending = still
+
+    def _launch(self, t: Task):
+        self._set_state(t, RUNNING)
+        if t.run is not None:
+            th = threading.Thread(target=self._run_task, args=(t,),
+                                  daemon=True)
+            self._threads[t.task_id] = th
+            th.start()
+
+    def _run_task(self, t: Task):
+        try:
+            t.run(t)
+            self.task_finished(t.task_id)
+        except _UserError as e:
+            self.task_failed(t.task_id, str(e), user_error=True)
+        except Exception as e:  # infrastructure-ish error -> retry
+            self.task_failed(t.task_id, f"{type(e).__name__}: {e}")
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for app in self.apps.values():
+            for t in app.tasks.values():
+                out[t.state] = out.get(t.state, 0) + 1
+        return out
+
+
+class _UserError(Exception):
+    """Raised by task bodies for errors in user input/code (no restart)."""
+
+
+UserError = _UserError

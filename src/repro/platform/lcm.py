@@ -1,0 +1,224 @@
+"""Lifecycle Manager (paper §Lifecycle Management).
+
+Responsible for "the entire lifecycle of the training job, from initial
+deployment to status updates, failure handling and garbage collection of
+learners and parameter servers". Stateless by itself: every piece of job
+state lives in ZooKeeper, so a crashed LCM instance can be replaced and
+``recover()`` resumes where the predecessor left off, and training jobs
+keep running while the LCM is down (decoupling test).
+
+Deployment order follows the paper: the PS app is deployed first; once it
+is RUNNING its address is read back from the scheduler and handed to the
+learners.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.platform.cluster import (App, Resources, Scheduler, RUNNING,
+                                    FINISHED, FAILED)
+from repro.platform.watchdog import JOB_DONE, JOB_FAILED
+from repro.platform.zookeeper import NoNodeError, ZooKeeper
+
+# job states
+QUEUED, DEPLOYING, PROCESSING, COMPLETED, FAILED_J, KILLED_J = (
+    "QUEUED", "DEPLOYING", "PROCESSING", "COMPLETED", "FAILED", "KILLED")
+
+
+@dataclass
+class JobSpec:
+    job_id: str
+    learners: int = 1
+    gpus_per_learner: int = 1
+    cpus_per_learner: float = 1.0
+    memory_mb: int = 1024
+    # fraction of learners that may be dead while training continues
+    min_alive_fraction: float = 0.5
+    learner_body: Optional[Callable] = None      # fn(watchdog, member_idx)
+    ps_body: Optional[Callable] = None           # fn(watchdog)
+
+
+class LifecycleManager:
+    def __init__(self, zk: ZooKeeper, scheduler: Scheduler):
+        self.zk = zk
+        self.scheduler = scheduler
+        zk.ensure("/dlaas/jobs")
+
+    # ---- ZK state helpers (LCM itself is stateless) -----------------------
+    def _jpath(self, job_id: str) -> str:
+        return f"/dlaas/jobs/{job_id}"
+
+    def _set(self, job_id: str, key: str, value: Dict):
+        path = f"{self._jpath(job_id)}/{key}"
+        data = json.dumps(value).encode()
+        if self.zk.exists(path):
+            self.zk.set(path, data)
+        else:
+            self.zk.create(path, data, makepath=True)
+
+    def _get(self, job_id: str, key: str) -> Optional[Dict]:
+        try:
+            data, _ = self.zk.get(f"{self._jpath(job_id)}/{key}")
+            return json.loads(data or b"{}")
+        except NoNodeError:
+            return None
+
+    def job_state(self, job_id: str) -> str:
+        rec = self._get(job_id, "state") or {}
+        return rec.get("state", "UNKNOWN")
+
+    def jobs(self) -> List[str]:
+        try:
+            return self.zk.children("/dlaas/jobs")
+        except NoNodeError:
+            return []
+
+    # ---- deployment ---------------------------------------------------------
+    def submit(self, spec: JobSpec):
+        self._set(spec.job_id, "state", {"state": QUEUED,
+                                         "ts": time.time()})
+        self._set(spec.job_id, "spec", {
+            "learners": spec.learners, "gpus": spec.gpus_per_learner,
+            "cpus": spec.cpus_per_learner, "memory_mb": spec.memory_mb,
+            "min_alive_fraction": spec.min_alive_fraction})
+        self.deploy(spec)
+
+    def deploy(self, spec: JobSpec):
+        self._set(spec.job_id, "state", {"state": DEPLOYING,
+                                         "ts": time.time()})
+        res = Resources(cpus=spec.cpus_per_learner,
+                        gpus=spec.gpus_per_learner,
+                        memory_mb=spec.memory_mb)
+        # paper: deploy the PS first (only for multi-learner jobs)
+        if spec.learners > 1 and spec.ps_body is not None:
+            ps_app = App(app_id=f"{spec.job_id}-ps",
+                         resources=Resources(cpus=1.0, gpus=0,
+                                             memory_mb=512),
+                         count=1, run=self._wrap(spec, "ps-0", spec.ps_body))
+            self.scheduler.submit(ps_app)
+        learner_app = App(
+            app_id=f"{spec.job_id}-learners", resources=res,
+            count=spec.learners,
+            run=self._wrap_learner(spec))
+        self.scheduler.submit(learner_app)
+
+    def _wrap(self, spec: JobSpec, member: str, body: Callable):
+        from repro.platform.watchdog import Watchdog
+
+        def run(task):
+            wd = Watchdog(self.zk, spec.job_id, member)
+            wd.run(lambda w: body(w))
+        return run
+
+    def _wrap_learner(self, spec: JobSpec):
+        from repro.platform.watchdog import Watchdog
+
+        def run(task):
+            idx = int(task.task_id.rsplit(".", 1)[1])
+            wd = Watchdog(self.zk, spec.job_id, f"learner-{idx}")
+            if spec.learner_body is None:
+                wd.run(lambda w: None)
+            else:
+                wd.run(lambda w: spec.learner_body(w, idx))
+        return run
+
+    # ---- monitoring ---------------------------------------------------------
+    def member_statuses(self, job_id: str) -> Dict[str, Dict]:
+        out = {}
+        base = f"{self._jpath(job_id)}/members"
+        try:
+            members = self.zk.children(base)
+        except NoNodeError:
+            return out
+        for m in members:
+            rec: Dict = {"alive": self.zk.exists(f"{base}/{m}/alive")}
+            try:
+                data, _ = self.zk.get(f"{base}/{m}/status")
+                rec.update(json.loads(data))
+            except NoNodeError:
+                pass
+            try:
+                data, _ = self.zk.get(f"{base}/{m}/heartbeat")
+                rec["heartbeat"] = json.loads(data)
+            except NoNodeError:
+                pass
+            out[m] = rec
+        return out
+
+    def monitor(self, job_id: str) -> str:
+        """One monitoring pass; returns the (possibly updated) job state.
+
+        Counts ephemeral liveness znodes and statuses: determines whether
+        training finished, failed on user error, or lost too many learners
+        to continue (paper: 'whether training can be continued even if a
+        small fraction of learners have failed')."""
+        state = self.job_state(job_id)
+        if state in (COMPLETED, FAILED_J, KILLED_J):
+            return state
+        st = self.member_statuses(job_id)
+        learners = {m: r for m, r in st.items() if m.startswith("learner")}
+        if not learners:
+            return state
+        spec = self._get(job_id, "spec") or {}
+        statuses = [r.get("status") for r in learners.values()]
+        if any(s == JOB_FAILED and "user" in (r.get("detail") or "")
+               for s, r in zip(statuses, learners.values())):
+            # user error: terminate the whole job, no restart
+            self.scheduler.kill_app(f"{job_id}-learners")
+            self.scheduler.kill_app(f"{job_id}-ps")
+            self._set(job_id, "state", {"state": FAILED_J,
+                                        "reason": "user error"})
+            return FAILED_J
+        if all(s == JOB_DONE for s in statuses):
+            self.decommission(job_id)
+            return COMPLETED
+        alive = sum(1 for r in learners.values() if r["alive"])
+        frac = alive / max(1, len(learners))
+        min_frac = spec.get("min_alive_fraction", 0.5)
+        self._set(job_id, "progress", {
+            "alive": alive, "total": len(learners),
+            "can_continue": frac >= min_frac})
+        if state != PROCESSING:
+            self._set(job_id, "state", {"state": PROCESSING,
+                                        "ts": time.time()})
+        return PROCESSING
+
+    # ---- completion / GC -----------------------------------------------------
+    def decommission(self, job_id: str):
+        """Paper: 'determine when all learners have finished training,
+        decommission them and reclaim computing resources'."""
+        self.scheduler.kill_app(f"{job_id}-ps")
+        self._set(job_id, "state", {"state": COMPLETED, "ts": time.time()})
+
+    def kill(self, job_id: str):
+        self.scheduler.kill_app(f"{job_id}-learners")
+        self.scheduler.kill_app(f"{job_id}-ps")
+        self._set(job_id, "state", {"state": KILLED_J, "ts": time.time()})
+
+    def gc(self, job_id: str):
+        """Garbage-collect a terminal job's znodes (keeps state record)."""
+        base = f"{self._jpath(job_id)}/members"
+        try:
+            for m in list(self.zk.children(base)):
+                self._rm_tree(f"{base}/{m}")
+        except NoNodeError:
+            pass
+
+    def _rm_tree(self, path: str):
+        try:
+            for ch in list(self.zk.children(path)):
+                self._rm_tree(f"{path}/{ch}")
+            self.zk.delete(path)
+        except NoNodeError:
+            pass
+
+    # ---- recovery (LCM statelessness) ----------------------------------------
+    @classmethod
+    def recover(cls, zk: ZooKeeper, scheduler: Scheduler
+                ) -> "LifecycleManager":
+        """A fresh LCM instance adopting all state from ZooKeeper — the
+        paper's decoupling claim: jobs proceed while the LCM is replaced."""
+        return cls(zk, scheduler)

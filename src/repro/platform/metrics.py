@@ -1,0 +1,201 @@
+"""Metrics service + training-progress analytics (paper §Understanding
+Training Progress).
+
+Implements the six progress indicators from the paper's user interviews:
+  (1) is accuracy better than random guessing?
+  (2) has accuracy plateaued? (notify/early-stop candidate)
+  (3) has a checkpoint been persisted at iteration k?
+  (4) did the learning rate change (accuracy jump point)?
+  (5) is accuracy stable over a long window?
+  (6) validation cadence and duration.
+plus the platform-side indicators (idle nodes, communication overhead)
+that are "useful in optimizing the DLaaS platform but not exposed to the
+user".
+
+Also includes the extensible log-parser service: pluggable parsers turn
+raw log streams into the common JSON-list format the visualization
+component consumes (paper §Platform Architecture (2)).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class Series:
+    steps: List[int] = field(default_factory=list)
+    values: List[float] = field(default_factory=list)
+
+    def add(self, step: int, value: float):
+        self.steps.append(step)
+        self.values.append(float(value))
+
+    def window(self, n: int) -> List[float]:
+        return self.values[-n:]
+
+
+class MetricsService:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._series: Dict[str, Dict[str, Series]] = defaultdict(
+            lambda: defaultdict(Series))
+        self._events: Dict[str, List[Dict]] = defaultdict(list)
+        self._subs: List[Callable[[str, str, int, float], None]] = []
+
+    # ---- ingestion ----------------------------------------------------------
+    def record(self, job_id: str, metric: str, step: int, value: float):
+        with self._lock:
+            self._series[job_id][metric].add(step, value)
+        for cb in self._subs:
+            try:
+                cb(job_id, metric, step, value)
+            except Exception:
+                pass
+
+    def event(self, job_id: str, kind: str, step: int, **kw):
+        with self._lock:
+            self._events[job_id].append({"kind": kind, "step": step,
+                                         "ts": time.time(), **kw})
+
+    def subscribe(self, cb: Callable[[str, str, int, float], None]):
+        self._subs.append(cb)
+
+    # ---- queries ---------------------------------------------------------------
+    def series(self, job_id: str, metric: str) -> Series:
+        with self._lock:
+            return self._series[job_id][metric]
+
+    def metrics(self, job_id: str) -> List[str]:
+        with self._lock:
+            return sorted(self._series[job_id])
+
+    def events(self, job_id: str, kind: Optional[str] = None) -> List[Dict]:
+        with self._lock:
+            ev = list(self._events[job_id])
+        return [e for e in ev if kind is None or e["kind"] == kind]
+
+    def to_json(self, job_id: str) -> str:
+        """The 'common JSON list format' of the visualization pipeline."""
+        with self._lock:
+            out = []
+            for metric, s in self._series[job_id].items():
+                out.extend({"metric": metric, "step": st, "value": v}
+                           for st, v in zip(s.steps, s.values))
+        return json.dumps(out)
+
+    # ---- the six progress indicators ------------------------------------------
+    def better_than_random(self, job_id: str, n_classes: int,
+                           metric: str = "accuracy") -> Optional[bool]:
+        s = self.series(job_id, metric)
+        if not s.values:
+            return None
+        return s.values[-1] > 1.0 / n_classes
+
+    def plateaued(self, job_id: str, metric: str = "loss",
+                  window: int = 10, rel_eps: float = 1e-3) -> bool:
+        s = self.series(job_id, metric)
+        w = s.window(window)
+        if len(w) < window:
+            return False
+        best_before = min(s.values[:-window]) if len(s.values) > window \
+            else float("inf")
+        return min(w) > best_before * (1 - rel_eps)
+
+    def checkpoints(self, job_id: str) -> List[Dict]:
+        return self.events(job_id, "checkpoint")
+
+    def lr_changes(self, job_id: str) -> List[Dict]:
+        s = self.series(job_id, "lr")
+        out = []
+        for i in range(1, len(s.values)):
+            if s.values[i] != s.values[i - 1]:
+                out.append({"step": s.steps[i], "from": s.values[i - 1],
+                            "to": s.values[i]})
+        return out
+
+    def stable(self, job_id: str, metric: str = "accuracy",
+               window: int = 20, max_cv: float = 0.02) -> bool:
+        w = self.series(job_id, metric).window(window)
+        if len(w) < window:
+            return False
+        mu = sum(w) / len(w)
+        if mu == 0:
+            return False
+        var = sum((x - mu) ** 2 for x in w) / len(w)
+        return math.sqrt(var) / abs(mu) <= max_cv
+
+    def validation_cadence(self, job_id: str) -> Dict:
+        ev = self.events(job_id, "validation")
+        if len(ev) < 2:
+            return {"count": len(ev)}
+        gaps = [b["step"] - a["step"] for a, b in zip(ev, ev[1:])]
+        durs = [e.get("duration_s", 0.0) for e in ev]
+        return {"count": len(ev), "mean_gap_steps": sum(gaps) / len(gaps),
+                "mean_duration_s": sum(durs) / len(durs)}
+
+    # ---- platform indicators ------------------------------------------------
+    def comm_overhead(self, job_id: str) -> Optional[float]:
+        """fraction of round time spent in push/pull sync."""
+        sync = self.series(job_id, "sync_time_s").values
+        total = self.series(job_id, "round_time_s").values
+        if not sync or not total:
+            return None
+        return sum(sync) / max(sum(total), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Extensible log parsing (paper: custom parsers per framework/log source)
+# ---------------------------------------------------------------------------
+
+
+class LogParserService:
+    """Parses raw log streams into (metric, step, value) triples via
+    pluggable regex parsers — 'extensibility here allows for the
+    installation of custom parsers to collect and correlate data'."""
+
+    def __init__(self, metrics: MetricsService):
+        self.metrics = metrics
+        self._parsers: List[Callable[[str], List[Dict]]] = []
+        self.register_regex(
+            r"step[= ](?P<step>\d+).*?loss[= ](?P<loss>[\d.eE+-]+)",
+            {"loss": "loss"})
+        self.register_regex(
+            r"step[= ](?P<step>\d+).*?acc(uracy)?[= ](?P<acc>[\d.eE+-]+)",
+            {"acc": "accuracy"})
+
+    def register_regex(self, pattern: str, fields: Dict[str, str]):
+        rx = re.compile(pattern)
+
+        def parse(line: str) -> List[Dict]:
+            m = rx.search(line)
+            if not m:
+                return []
+            step = int(m.group("step"))
+            out = []
+            for grp, metric in fields.items():
+                try:
+                    out.append({"metric": metric, "step": step,
+                                "value": float(m.group(grp))})
+                except (IndexError, ValueError):
+                    pass
+            return out
+        self._parsers.append(parse)
+
+    def register(self, parser: Callable[[str], List[Dict]]):
+        self._parsers.append(parser)
+
+    def feed(self, job_id: str, line: str) -> int:
+        n = 0
+        for p in self._parsers:
+            for rec in p(line):
+                self.metrics.record(job_id, rec["metric"], rec["step"],
+                                    rec["value"])
+                n += 1
+        return n

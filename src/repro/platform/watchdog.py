@@ -1,0 +1,90 @@
+"""Watchdog sidecar (paper §Lifecycle Management).
+
+"A sidecar (auxiliary) process called the 'watchdog' in the container
+monitors the learner/parameter server and updates its status in the
+corresponding znode." Each container also "creates an ephemeral znode at
+startup, enabling the LCM to detect ... container crashes".
+
+Here the watchdog wraps a learner callable: it creates the ephemeral
+liveness znode, mirrors status + heartbeats + log lines into ZooKeeper,
+classifies exceptions (user error -> JOB_FAILED, no restart; infra error ->
+re-raise so the scheduler restarts the task), and tears the session down on
+exit (which deletes the ephemeral and wakes the LCM).
+"""
+from __future__ import annotations
+
+import json
+import time
+import traceback
+from typing import Callable, Optional
+
+from repro.platform.cluster import UserError
+from repro.platform.zookeeper import ZooKeeper
+
+# learner status values (paper: e.g. JOB_FAILED)
+PENDING, DOWNLOADING, TRAINING, CHECKPOINTING, JOB_DONE, JOB_FAILED = (
+    "PENDING", "DOWNLOADING", "TRAINING", "CHECKPOINTING", "JOB_DONE",
+    "JOB_FAILED")
+
+
+class Watchdog:
+    def __init__(self, zk: ZooKeeper, job_id: str, member: str):
+        self.zk = zk
+        self.job_id = job_id
+        self.member = member            # e.g. learner-0, ps-0
+        self.base = f"/dlaas/jobs/{job_id}/members/{member}"
+        self.session = zk.session()
+        zk.ensure(self.base)
+        zk.create(f"{self.base}/alive", b"1", ephemeral=True,
+                  session=self.session, makepath=True)
+        self.set_status(PENDING)
+
+    # ---- status / heartbeat / logs ---------------------------------------
+    def set_status(self, status: str, detail: str = ""):
+        data = json.dumps({"status": status, "detail": detail,
+                           "ts": time.time()}).encode()
+        path = f"{self.base}/status"
+        if self.zk.exists(path):
+            self.zk.set(path, data)
+        else:
+            self.zk.create(path, data, makepath=True)
+
+    def heartbeat(self, step: int, **metrics):
+        data = json.dumps({"step": step, "ts": time.time(),
+                           **metrics}).encode()
+        path = f"{self.base}/heartbeat"
+        if self.zk.exists(path):
+            self.zk.set(path, data)
+        else:
+            self.zk.create(path, data, makepath=True)
+
+    def log(self, line: str):
+        path = f"{self.base}/log"
+        self.zk.create(path + "/l", line.encode(), sequential=True,
+                       makepath=True)
+
+    # ---- supervised execution --------------------------------------------
+    def run(self, fn: Callable[["Watchdog"], None]):
+        """Run the learner body under supervision."""
+        try:
+            self.set_status(TRAINING)
+            fn(self)
+            self.set_status(JOB_DONE)
+        except UserError as e:
+            # paper: user-input faults -> graceful terminate + JOB_FAILED;
+            # LCM terminates the job, no restart.
+            self.log(f"user error: {e}")
+            self.set_status(JOB_FAILED, str(e))
+            raise
+        except Exception as e:
+            self.log(f"infra error: {type(e).__name__}: {e}\n"
+                     + traceback.format_exc()[-1500:])
+            self.set_status(JOB_FAILED, f"infra: {e}")
+            raise
+        finally:
+            self.session.close()       # deletes the ephemeral znode
+
+    def crash(self):
+        """Simulate a container crash: the session expires WITHOUT any
+        status update — the LCM must notice via the ephemeral znode."""
+        self.session.expire()

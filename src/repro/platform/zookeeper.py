@@ -1,0 +1,250 @@
+"""In-process ZooKeeper simulation.
+
+Implements the coordination contract DLaaS depends on (paper §Fault-
+Tolerance): a replicated, atomic KV tree with ephemeral znodes bound to
+sessions, sequential znodes, watches, and atomic counters (the global
+cursor). Replication is modelled as a liveness quorum — operations fail
+with ``ConnectionLoss`` when a majority of replicas are down, matching the
+paper's "unless a majority of the nodes fail" availability claim.
+
+Thread-safe: the LCM, watchdogs and learner threads all talk to one
+instance concurrently.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class ZKError(Exception):
+    pass
+
+
+class NoNodeError(ZKError):
+    pass
+
+
+class NodeExistsError(ZKError):
+    pass
+
+
+class BadVersionError(ZKError):
+    pass
+
+
+class ConnectionLoss(ZKError):
+    """Raised when a majority of replicas are down (no quorum)."""
+
+
+@dataclass
+class ZNode:
+    data: bytes = b""
+    version: int = 0
+    ephemeral_owner: Optional[int] = None       # session id
+    children: Dict[str, "ZNode"] = field(default_factory=dict)
+    seq_counter: int = 0
+    ctime: float = field(default_factory=time.time)
+
+
+def _split(path: str) -> List[str]:
+    parts = [p for p in path.strip("/").split("/") if p]
+    if not parts:
+        raise ZKError(f"bad path {path!r}")
+    return parts
+
+
+class Session:
+    """A client session; closing (or expiring) it deletes its ephemerals."""
+
+    _next_id = [1]
+
+    def __init__(self, zk: "ZooKeeper"):
+        self.zk = zk
+        self.id = Session._next_id[0]
+        Session._next_id[0] += 1
+        self.alive = True
+
+    def close(self):
+        if self.alive:
+            self.alive = False
+            self.zk._expire_session(self.id)
+
+    # paper terminology: a crashed container's session *expires*
+    expire = close
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+
+class ZooKeeper:
+    def __init__(self, replicas: int = 3):
+        self._root = ZNode()
+        self._lock = threading.RLock()
+        self._watches: Dict[str, List[Callable[[str, str], None]]] = {}
+        self._replicas_alive = [True] * replicas
+
+    # ---- replication / quorum --------------------------------------------
+    def kill_replica(self, i: int):
+        with self._lock:
+            self._replicas_alive[i] = False
+
+    def restore_replica(self, i: int):
+        with self._lock:
+            self._replicas_alive[i] = True
+
+    def has_quorum(self) -> bool:
+        n = len(self._replicas_alive)
+        return sum(self._replicas_alive) * 2 > n
+
+    def _check_quorum(self):
+        if not self.has_quorum():
+            raise ConnectionLoss("no ZK quorum")
+
+    # ---- sessions ----------------------------------------------------------
+    def session(self) -> Session:
+        return Session(self)
+
+    def _expire_session(self, sid: int):
+        with self._lock:
+            doomed: List[str] = []
+
+            def walk(node: ZNode, path: str):
+                for name, ch in list(node.children.items()):
+                    p = f"{path}/{name}"
+                    if ch.ephemeral_owner == sid:
+                        doomed.append(p)
+                    else:
+                        walk(ch, p)
+            walk(self._root, "")
+            for p in doomed:
+                try:
+                    self._delete_locked(p)
+                except NoNodeError:
+                    pass
+
+    # ---- tree ops ----------------------------------------------------------
+    def _get_node(self, path: str) -> ZNode:
+        node = self._root
+        for part in _split(path):
+            if part not in node.children:
+                raise NoNodeError(path)
+            node = node.children[part]
+        return node
+
+    def create(self, path: str, data: bytes = b"", *,
+               ephemeral: bool = False, sequential: bool = False,
+               session: Optional[Session] = None,
+               makepath: bool = False) -> str:
+        if ephemeral and session is None:
+            raise ZKError("ephemeral znode requires a session")
+        with self._lock:
+            self._check_quorum()
+            parts = _split(path)
+            node = self._root
+            for part in parts[:-1]:
+                if part not in node.children:
+                    if not makepath:
+                        raise NoNodeError(path)
+                    node.children[part] = ZNode()
+                node = node.children[part]
+            name = parts[-1]
+            if sequential:
+                name = f"{name}{node.seq_counter:010d}"
+                node.seq_counter += 1
+            if name in node.children:
+                raise NodeExistsError(path)
+            node.children[name] = ZNode(
+                data=data,
+                ephemeral_owner=session.id if ephemeral else None)
+            full = "/" + "/".join(parts[:-1] + [name]) if len(parts) > 1 \
+                else "/" + name
+            self._fire(full, "created")
+            parent = "/" + "/".join(parts[:-1]) if len(parts) > 1 else "/"
+            self._fire(parent, "children")
+            return full
+
+    def get(self, path: str) -> Tuple[bytes, int]:
+        with self._lock:
+            self._check_quorum()
+            n = self._get_node(path)
+            return n.data, n.version
+
+    def set(self, path: str, data: bytes, version: int = -1) -> int:
+        with self._lock:
+            self._check_quorum()
+            n = self._get_node(path)
+            if version != -1 and version != n.version:
+                raise BadVersionError(path)
+            n.data = data
+            n.version += 1
+            self._fire(path, "changed")
+            return n.version
+
+    def exists(self, path: str) -> bool:
+        with self._lock:
+            try:
+                self._get_node(path)
+                return True
+            except NoNodeError:
+                return False
+
+    def children(self, path: str) -> List[str]:
+        with self._lock:
+            self._check_quorum()
+            return sorted(self._get_node(path).children)
+
+    def _delete_locked(self, path: str):
+        parts = _split(path)
+        node = self._root
+        for part in parts[:-1]:
+            if part not in node.children:
+                raise NoNodeError(path)
+            node = node.children[part]
+        if parts[-1] not in node.children:
+            raise NoNodeError(path)
+        del node.children[parts[-1]]
+        self._fire(path, "deleted")
+        parent = "/" + "/".join(parts[:-1]) if len(parts) > 1 else "/"
+        self._fire(parent, "children")
+
+    def delete(self, path: str):
+        with self._lock:
+            self._check_quorum()
+            self._delete_locked(path)
+
+    def ensure(self, path: str):
+        with self._lock:
+            if not self.exists(path):
+                self.create(path, makepath=True)
+
+    # ---- atomic counter (global cursor substrate) ---------------------------
+    def increment(self, path: str, by: int = 1) -> int:
+        """Atomic add; returns the PRIOR value (fetch-and-add)."""
+        with self._lock:
+            self._check_quorum()
+            if not self.exists(path):
+                self.create(path, b"0", makepath=True)
+            n = self._get_node(path)
+            prior = int(n.data or b"0")
+            n.data = str(prior + by).encode()
+            n.version += 1
+            self._fire(path, "changed")
+            return prior
+
+    # ---- watches -------------------------------------------------------------
+    def watch(self, path: str, cb: Callable[[str, str], None]):
+        """cb(path, event) with event in created|changed|deleted|children."""
+        with self._lock:
+            self._watches.setdefault(path, []).append(cb)
+
+    def _fire(self, path: str, event: str):
+        for cb in self._watches.get(path, []):
+            try:
+                cb(path, event)
+            except Exception:
+                pass

@@ -1,0 +1,272 @@
+"""Learner runtime — the ``train.sh`` analogue executed inside a simulated
+container under watchdog supervision.
+
+Pluggable "frameworks" (paper §Extensibility): each plugin provides the
+three-script contract — ``load`` (fetch training data via the Storage
+Manager), ``train`` (one local step given a batch), ``store`` (upload the
+trained model). Registered plugins play the role of framework Docker
+images; adding a family requires only a new plugin.
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.cursor import GlobalCursor
+from repro.core.software_ps import SoftwareParameterServer
+from repro.data.pipeline import DatasetSpec, SyntheticCorpus
+from repro.platform.cluster import UserError
+from repro.platform.metrics import MetricsService
+from repro.platform.storage import StorageManager
+from repro.platform.watchdog import CHECKPOINTING, TRAINING, Watchdog
+
+
+# ---------------------------------------------------------------------------
+# Framework plugins
+# ---------------------------------------------------------------------------
+
+PLUGINS: Dict[str, Callable] = {}
+
+
+def register_plugin(name: str):
+    def deco(cls):
+        PLUGINS[name] = cls
+        return cls
+    return deco
+
+
+@register_plugin("repro-lm")
+class LMPlugin:
+    """Tiny decoder LM from the model zoo (smoke-scale family configs)."""
+
+    def __init__(self, framework_cfg: Dict):
+        from repro.configs.base import reduce_for_smoke
+        from repro.configs.registry import get_arch
+        from repro.distributed.sharding import Dist
+        from repro.models import make_model
+        arch = framework_cfg.get("arch", "stablelm-1.6b")
+        cfg = reduce_for_smoke(get_arch(arch))
+        self.cfg = cfg
+        self.model = make_model(cfg, Dist(), {"remat": "none",
+                                              "xent_chunk": 64,
+                                              "q_chunk": 64, "k_chunk": 64})
+        self.vocab = cfg.vocab_size
+        self._loss_grad = jax.jit(jax.value_and_grad(
+            lambda p, b: self.model.loss(p, b)))
+
+    def init_params(self, seed: int):
+        return self.model.init(jax.random.PRNGKey(seed))
+
+    def loss_and_grad(self, params, batch):
+        b = {"tokens": jnp.asarray(batch["tokens"]),
+             "labels": jnp.asarray(batch["labels"])}
+        return self._loss_grad(params, b)
+
+    def dataset_spec(self, data_cfg: Dict) -> DatasetSpec:
+        return DatasetSpec(n_docs=data_cfg.get("n_docs", 512),
+                           seq_len=data_cfg.get("seq_len", 32),
+                           vocab_size=self.vocab,
+                           seed=data_cfg.get("seed", 0))
+
+
+@register_plugin("repro-mlp")
+class MLPPlugin:
+    """Minimal classifier used by the colloquium-style hyperparameter
+    sweep (CIFAR-like synthetic task)."""
+
+    def __init__(self, framework_cfg: Dict):
+        self.d_in = framework_cfg.get("d_in", 32)
+        self.d_hidden = framework_cfg.get("d_hidden", 64)
+        self.n_classes = framework_cfg.get("n_classes", 10)
+        self.vocab = self.n_classes
+
+        def loss_fn(p, batch):
+            h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            nll = -jax.nn.log_softmax(logits)[
+                jnp.arange(batch["y"].shape[0]), batch["y"]]
+            acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+            return jnp.mean(nll), acc
+        self._lg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+    def init_params(self, seed: int):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        s1 = 1.0 / np.sqrt(self.d_in)
+        s2 = 1.0 / np.sqrt(self.d_hidden)
+        return {"w1": jax.random.normal(k1, (self.d_in, self.d_hidden)) * s1,
+                "b1": jnp.zeros(self.d_hidden),
+                "w2": jax.random.normal(k2, (self.d_hidden,
+                                             self.n_classes)) * s2,
+                "b2": jnp.zeros(self.n_classes)}
+
+    def loss_and_grad(self, params, batch):
+        x = _synthetic_features(batch["tokens"], self.d_in,
+                                self.n_classes)
+        (loss, acc), g = self._lg(params, x)
+        self.last_acc = float(acc)
+        return loss, g
+
+    def dataset_spec(self, data_cfg: Dict) -> DatasetSpec:
+        return DatasetSpec(n_docs=data_cfg.get("n_docs", 2048),
+                           seq_len=2, vocab_size=1024,
+                           seed=data_cfg.get("seed", 0))
+
+
+def _synthetic_features(tokens: np.ndarray, d_in: int, n_classes: int):
+    """Deterministic vision-like task: class = doc token hash; features =
+    class prototype + noise (learnable, accuracy can approach 1.0)."""
+    rng = np.random.Generator(np.random.Philox(key=1234))
+    protos = rng.normal(size=(n_classes, d_in)).astype(np.float32)
+    seed_tokens = np.asarray(tokens)[:, 0]
+    y = (seed_tokens % n_classes).astype(np.int32)
+    noise_rng = np.random.Generator(np.random.Philox(key=99))
+    noise = noise_rng.normal(size=(len(y), d_in)).astype(np.float32)
+    x = protos[y] + 0.5 * noise
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+# ---------------------------------------------------------------------------
+# Learner body
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LearnerJobConfig:
+    job_id: str
+    framework: str = "repro-lm"
+    framework_cfg: Dict = field(default_factory=dict)
+    data_cfg: Dict = field(default_factory=dict)
+    n_learners: int = 1
+    batch_docs: int = 8
+    steps: int = 50
+    comm_every: int = 1
+    lr: float = 0.1
+    optimizer: str = "sgd"          # PS-side solver
+    solver: str = "psgd"            # psgd | modelavg | easgd | downpour
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 20
+    # test hooks
+    fail_at_step: Dict[int, int] = field(default_factory=dict)
+    user_error_at: Optional[int] = None
+
+
+def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
+                      cursor: GlobalCursor, storage: StorageManager,
+                      metrics: MetricsService,
+                      results: Optional[Dict] = None):
+    """Returns fn(watchdog, learner_idx) run under the watchdog."""
+    plugin = PLUGINS[cfg.framework](cfg.framework_cfg)
+    corpus = SyntheticCorpus(plugin.dataset_spec(cfg.data_cfg))
+
+    def body(wd: Watchdog, idx: int):
+        ps.join(idx)
+        try:
+            _train(wd, idx)
+        finally:
+            ps.leave(idx)
+
+    def _train(wd: Watchdog, idx: int):
+        params = plugin.init_params(cfg.seed)
+        flat0, unravel = ravel_pytree(params)
+        ckpt = None
+        start_step = 0
+        if cfg.checkpoint_dir and idx == 0:
+            ckpt = CheckpointManager(cfg.checkpoint_dir, keep=3)
+        # resume from checkpoint if one exists (any learner may restore
+        # the global params by pulling after learner-0 pushed them)
+        if cfg.checkpoint_dir:
+            probe = CheckpointManager(cfg.checkpoint_dir, keep=3)
+            last = probe.latest_valid()
+            if last is not None:
+                tmpl = {"flat": np.zeros_like(np.asarray(flat0))}
+                tree, extra = probe.restore(last, tmpl)
+                start_step = int(extra.get("step", last))
+                # learner 0 republishes restored weights to the PS shards
+                if idx == 0:
+                    for shard, part in zip(
+                            ps.shards, ps._partition(
+                                np.asarray(tree["flat"]))):
+                        shard.values[:] = part
+                    cur_epoch = int(extra.get("epoch", 0))
+                    cur_off = int(extra.get("offset", 0))
+                    cursor.restore(cur_epoch, cur_off)
+                wd.log(f"resumed from checkpoint step={start_step}")
+
+        flat = ps.pull(idx)
+        params = unravel(jnp.asarray(flat))
+        t_round = time.time()
+        for step in range(start_step, cfg.steps):
+            if cfg.fail_at_step.get(idx) == step:
+                cfg.fail_at_step.pop(idx)     # transient: fires once
+                wd.log(f"injected crash at step {step}")
+                wd.crash()
+                raise RuntimeError("simulated container crash")
+            if cfg.user_error_at is not None and step == cfg.user_error_at:
+                raise UserError("bad hyperparameter in user model")
+            chunks = cursor.next_chunk(cfg.batch_docs)
+            batch = corpus.batch_for(chunks)
+            loss, grads = plugin.loss_and_grad(params, batch)
+            gflat, _ = ravel_pytree(grads)
+            if cfg.solver == "psgd":
+                t0 = time.time()
+                ps.push(idx, np.asarray(gflat))
+                flat = ps.pull(idx)
+                sync_s = time.time() - t0
+                params = unravel(jnp.asarray(flat))
+            else:
+                # local step; periodic weight sync (modelavg)
+                pflat, _ = ravel_pytree(params)
+                pflat = pflat - cfg.lr * gflat
+                params = unravel(pflat)
+                sync_s = 0.0
+                if (step + 1) % cfg.comm_every == 0:
+                    t0 = time.time()
+                    ps.push(idx, np.asarray(pflat))
+                    params = unravel(jnp.asarray(ps.pull(idx)))
+                    sync_s = time.time() - t0
+            wd.heartbeat(step, loss=float(loss))
+            wd.log(f"step={step} loss={float(loss):.4f}"
+                   + (f" acc={plugin.last_acc:.4f}"
+                      if hasattr(plugin, "last_acc") else ""))
+            metrics.record(cfg.job_id, "loss", step, float(loss))
+            if hasattr(plugin, "last_acc"):
+                metrics.record(cfg.job_id, "accuracy", step,
+                               plugin.last_acc)
+            metrics.record(cfg.job_id, "lr", step, cfg.lr)
+            metrics.record(cfg.job_id, "sync_time_s", step, sync_s)
+            metrics.record(cfg.job_id, "round_time_s", step,
+                           time.time() - t_round)
+            t_round = time.time()
+            if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
+                wd.set_status(CHECKPOINTING)
+                pflat, _ = ravel_pytree(params)
+                epoch, offset = cursor.position()
+                ckpt.save(step + 1, {"flat": np.asarray(pflat)},
+                          extra={"step": step + 1, "epoch": epoch,
+                                 "offset": offset})
+                metrics.event(cfg.job_id, "checkpoint", step + 1)
+                wd.set_status(TRAINING)
+        # store.sh: upload the trained model
+        if idx == 0:
+            pflat, _ = ravel_pytree(params)
+            buf = io.BytesIO()
+            np.save(buf, np.asarray(pflat))
+            storage.upload("results", cfg.job_id, "trained_model.npy",
+                           buf.getvalue())
+            if results is not None:
+                results["final_loss"] = float(loss)
+                results["params"] = np.asarray(pflat)
+        if ckpt is not None:
+            ckpt.wait()
+
+    return body

@@ -1,0 +1,114 @@
+"""DLaaS CLI (paper: 'The CLI provides easy to use command interface over
+the REST API').
+
+  dlaas model deploy  --manifest m.yml
+  dlaas model list
+  dlaas train start   --model <id> [--learners N --gpus G ...]
+  dlaas train list
+  dlaas train status  --id <tid>
+  dlaas train logs    --id <tid> [--follow]
+  dlaas train delete  --id <tid>
+  dlaas train download --id <tid> --out model.npy
+
+Speaks plain HTTP via urllib; point it at a server with --url.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import urllib.request
+
+
+def _req(url: str, method: str = "GET", body=None, token: str = "cli"):
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(url, data=data, method=method)
+    req.add_header("Authorization", f"Bearer {token}")
+    if data:
+        req.add_header("Content-Type", "application/json")
+    with urllib.request.urlopen(req) as r:
+        payload = r.read()
+    try:
+        return json.loads(payload)
+    except json.JSONDecodeError:
+        return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="dlaas")
+    ap.add_argument("--url", default="http://127.0.0.1:8080")
+    ap.add_argument("--token", default="cli")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    m = sub.add_parser("model")
+    msub = m.add_subparsers(dest="sub", required=True)
+    d = msub.add_parser("deploy")
+    d.add_argument("--manifest", required=True)
+    msub.add_parser("list")
+
+    t = sub.add_parser("train")
+    tsub = t.add_subparsers(dest="sub", required=True)
+    s = tsub.add_parser("start")
+    s.add_argument("--model", required=True)
+    s.add_argument("--learners", type=int)
+    s.add_argument("--gpus", type=int)
+    s.add_argument("--steps", type=int)
+    tsub.add_parser("list")
+    for name in ("status", "logs", "delete", "download"):
+        p = tsub.add_parser(name)
+        p.add_argument("--id", required=True)
+        if name == "download":
+            p.add_argument("--out", required=True)
+        if name == "logs":
+            p.add_argument("--follow", action="store_true")
+
+    args = ap.parse_args(argv)
+    base = args.url.rstrip("/")
+
+    if args.cmd == "model" and args.sub == "deploy":
+        manifest = open(args.manifest).read()
+        out = _req(f"{base}/v1/models", "POST",
+                   {"manifest": manifest}, args.token)
+        print(json.dumps(out))
+    elif args.cmd == "model" and args.sub == "list":
+        print(json.dumps(_req(f"{base}/v1/models", token=args.token),
+                         indent=1))
+    elif args.cmd == "train" and args.sub == "start":
+        overrides = {k: getattr(args, k) for k in
+                     ("learners", "gpus", "steps")
+                     if getattr(args, k) is not None}
+        out = _req(f"{base}/v1/trainings", "POST",
+                   {"model_id": args.model, "overrides": overrides},
+                   args.token)
+        print(json.dumps(out))
+    elif args.cmd == "train" and args.sub == "list":
+        print(json.dumps(_req(f"{base}/v1/trainings", token=args.token),
+                         indent=1))
+    elif args.cmd == "train" and args.sub == "status":
+        print(json.dumps(_req(f"{base}/v1/trainings/{args.id}",
+                              token=args.token), indent=1))
+    elif args.cmd == "train" and args.sub == "logs":
+        if args.follow:
+            req = urllib.request.Request(
+                f"{base}/v1/trainings/{args.id}/logs/stream")
+            with urllib.request.urlopen(req) as r:
+                for line in r:
+                    sys.stdout.write(line.decode())
+        else:
+            out = _req(f"{base}/v1/trainings/{args.id}/logs",
+                       token=args.token)
+            print("\n".join(out.get("logs", [])))
+    elif args.cmd == "train" and args.sub == "delete":
+        print(json.dumps(_req(f"{base}/v1/trainings/{args.id}", "DELETE",
+                              token=args.token)))
+    elif args.cmd == "train" and args.sub == "download":
+        data = _req(f"{base}/v1/trainings/{args.id}/model",
+                    token=args.token)
+        with open(args.out, "wb") as f:
+            f.write(data if isinstance(data, bytes)
+                    else json.dumps(data).encode())
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

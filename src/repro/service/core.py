@@ -1,0 +1,232 @@
+"""DLaaS core service wiring — the four-step user flow of the paper
+(prepare / upload / train+monitor / download) over the platform services.
+
+This object is what the REST API (service/rest.py) and the CLI call into;
+it owns the simulated datacenter, ZooKeeper, scheduler, LCM, storage,
+metrics, and executes real (smoke-scale) JAX training jobs in learner
+threads under watchdog supervision.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cursor import GlobalCursor
+from repro.core.software_ps import SoftwareParameterServer
+from repro.platform.cluster import Cluster, Node, Resources, Scheduler
+from repro.platform.lcm import JobSpec, LifecycleManager
+from repro.platform.metrics import LogParserService, MetricsService
+from repro.platform.storage import (LocalFSStore, ObjectStore,
+                                    StorageManager)
+from repro.platform.zookeeper import NoNodeError, ZooKeeper
+from repro.runtime.learner import (LearnerJobConfig, PLUGINS,
+                                   make_learner_body)
+from repro.service.manifest import parse_manifest, validate_manifest
+
+
+def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
+    return Cluster([Node(f"node-{i}",
+                         Resources(cpus=16, gpus=gpus_per_node,
+                                   memory_mb=64000))
+                    for i in range(n_nodes)])
+
+
+class DLaaSCore:
+    def __init__(self, workdir: str, *, cluster: Optional[Cluster] = None,
+                 health_checks: bool = True, tick_interval: float = 0.02):
+        self.zk = ZooKeeper()
+        self.cluster = cluster or default_cluster()
+        self.scheduler = Scheduler(self.cluster,
+                                   health_checks=health_checks)
+        self.lcm = LifecycleManager(self.zk, self.scheduler)
+        self.metrics = MetricsService()
+        self.log_parser = LogParserService(self.metrics)
+        self.storage = StorageManager()
+        self.workdir = workdir
+        self.storage.register("local", LocalFSStore(f"{workdir}/local"))
+        self.storage.register(
+            "objectstore", ObjectStore(f"{workdir}/objectstore"))
+        self.storage.register("results", LocalFSStore(f"{workdir}/results"))
+        self.models: Dict[str, Dict] = {}
+        self.trainings: Dict[str, Dict] = {}
+        self._job_seq = itertools.count(1)
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._ticker = threading.Thread(target=self._tick_loop,
+                                        args=(tick_interval,), daemon=True)
+        self._ticker.start()
+        # metering (API layer concern, kept with the core for simplicity)
+        self.usage: Dict[str, int] = {}
+
+    def close(self):
+        self._stop.set()
+        self._ticker.join(timeout=2)
+
+    def _tick_loop(self, interval: float):
+        while not self._stop.is_set():
+            try:
+                self.scheduler.tick()
+                for jid in list(self.trainings):
+                    self.lcm.monitor(jid)
+            except Exception:
+                pass
+            time.sleep(interval)
+
+    def _meter(self, user: str):
+        self.usage[user] = self.usage.get(user, 0) + 1
+
+    # ------------------------------------------------------------------ models
+    def deploy_model(self, manifest_text: str, user: str = "anon") -> Dict:
+        self._meter(user)
+        manifest = parse_manifest(manifest_text)
+        errs = validate_manifest(manifest)
+        if errs:
+            raise ValueError("; ".join(errs))
+        fw = manifest.get("framework") or {}
+        fw_name = fw.get("name") if isinstance(fw, dict) else fw
+        if fw_name not in PLUGINS:
+            raise ValueError(f"unsupported framework {fw_name!r}; "
+                             f"supported: {sorted(PLUGINS)}")
+        model_id = f"model-{uuid.uuid4().hex[:8]}"
+        rec = {"model_id": model_id, "manifest": manifest, "user": user,
+               "created": time.time()}
+        with self._lock:
+            self.models[model_id] = rec
+        return {"model_id": model_id}
+
+    def list_models(self, user: str = "anon") -> List[Dict]:
+        self._meter(user)
+        with self._lock:
+            return [{"model_id": k, "name": v["manifest"].get("name")}
+                    for k, v in self.models.items()]
+
+    def get_model(self, model_id: str) -> Dict:
+        with self._lock:
+            if model_id not in self.models:
+                raise KeyError(model_id)
+            return self.models[model_id]
+
+    def delete_model(self, model_id: str):
+        with self._lock:
+            self.models.pop(model_id, None)
+
+    # --------------------------------------------------------------- trainings
+    def create_training(self, model_id: str, overrides: Optional[Dict] = None,
+                        user: str = "anon") -> Dict:
+        self._meter(user)
+        model = self.get_model(model_id)
+        manifest = dict(model["manifest"])
+        manifest.update(overrides or {})
+        job_id = f"training-{next(self._job_seq):05d}"
+        fw = manifest.get("framework") or {}
+        fw_cfg = {k: v for k, v in fw.items()
+                  if k not in ("name", "version")} if isinstance(fw, dict) \
+            else {}
+        n_learners = int(manifest.get("learners", 1))
+        jcfg = LearnerJobConfig(
+            job_id=job_id,
+            framework=fw.get("name") if isinstance(fw, dict) else fw,
+            framework_cfg=fw_cfg,
+            data_cfg=manifest.get("data", {}) or {},
+            n_learners=n_learners,
+            batch_docs=int(manifest.get("batch_docs", 8)),
+            steps=int(manifest.get("steps", 40)),
+            comm_every=int(manifest.get("comm_every", 1)),
+            lr=float(manifest.get("lr", 0.1)),
+            optimizer=str(manifest.get("optimizer", "sgd")),
+            solver=str(manifest.get("solver", "psgd")),
+            seed=int(manifest.get("seed", 0)),
+            checkpoint_dir=f"{self.workdir}/ckpt/{job_id}",
+            checkpoint_every=int(manifest.get("checkpoint_every", 20)),
+            user_error_at=manifest.get("user_error_at"),
+            fail_at_step={int(k): int(v) for k, v in
+                          (manifest.get("fail_at_step") or {}).items()},
+        )
+        plugin = PLUGINS[jcfg.framework](jcfg.framework_cfg)
+        params0 = plugin.init_params(jcfg.seed)
+        from jax.flatten_util import ravel_pytree
+        flat0, _ = ravel_pytree(params0)
+        ps = SoftwareParameterServer(
+            np.asarray(flat0), n_shards=4, n_learners=n_learners,
+            optimizer=(jcfg.optimizer if jcfg.solver in
+                       ("psgd", "downpour") else "average"),
+            lr=jcfg.lr,
+            trigger="on_arrival" if jcfg.solver == "downpour" else "bsp")
+        cursor = GlobalCursor(self.zk, f"/dlaas/jobs/{job_id}/cursor",
+                              dataset_size=int(
+                                  (manifest.get("data") or {}).get(
+                                      "n_docs", 512)))
+        results: Dict[str, Any] = {}
+        body = make_learner_body(jcfg, ps, cursor, self.storage,
+                                 self.metrics, results)
+        spec = JobSpec(
+            job_id=job_id, learners=n_learners,
+            gpus_per_learner=int(manifest.get("gpus", 1)),
+            memory_mb=int(str(manifest.get("memory", "1024MiB")
+                              ).rstrip("MiB") or 1024),
+            learner_body=body,
+            ps_body=(lambda wd: None) if n_learners > 1 else None)
+        rec = {"training_id": job_id, "model_id": model_id,
+               "user": user, "created": time.time(),
+               "manifest": manifest, "results": results, "ps": ps,
+               "spec": spec}
+        with self._lock:
+            self.trainings[job_id] = rec
+        self.lcm.submit(spec)
+        return {"training_id": job_id}
+
+    def list_trainings(self, user: str = "anon") -> List[Dict]:
+        self._meter(user)
+        with self._lock:
+            ids = list(self.trainings)
+        return [{"training_id": i, "status": self.lcm.job_state(i)}
+                for i in ids]
+
+    def training_status(self, job_id: str) -> Dict:
+        state = self.lcm.monitor(job_id)
+        members = self.lcm.member_statuses(job_id)
+        loss = self.metrics.series(job_id, "loss")
+        return {"training_id": job_id, "status": state,
+                "members": members,
+                "last_loss": loss.values[-1] if loss.values else None,
+                "steps_done": loss.steps[-1] + 1 if loss.steps else 0}
+
+    def terminate_training(self, job_id: str):
+        self.lcm.kill(job_id)
+
+    def training_logs(self, job_id: str, member: str = "learner-0"
+                      ) -> List[str]:
+        base = f"/dlaas/jobs/{job_id}/members/{member}/log"
+        try:
+            names = self.zk.children(base)
+        except NoNodeError:
+            return []
+        out = []
+        for n in names:
+            data, _ = self.zk.get(f"{base}/{n}")
+            out.append(data.decode())
+        return out
+
+    def training_metrics(self, job_id: str) -> str:
+        return self.metrics.to_json(job_id)
+
+    def download_model(self, job_id: str) -> bytes:
+        return self.storage.download("results", job_id,
+                                     "trained_model.npy")
+
+    # ---------------------------------------------------------------- helpers
+    def wait_for(self, job_id: str, timeout: float = 60.0) -> str:
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            st = self.lcm.monitor(job_id)
+            if st in ("COMPLETED", "FAILED", "KILLED"):
+                return st
+            time.sleep(0.05)
+        return self.lcm.job_state(job_id)

@@ -1,0 +1,128 @@
+"""manifest.yml parsing (paper Listing 1).
+
+A dependency-free YAML-subset parser covering the manifest structure the
+paper shows: nested mappings by 2-space indentation, ``- item`` lists of
+mappings, and scalar values (int/float/bool/quoted/plain strings). JSON
+manifests are accepted too.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Tuple, Union
+
+
+def _parse_scalar(s: str) -> Any:
+    s = s.strip()
+    if not s:
+        return None
+    if s.startswith('"') and s.endswith('"') and len(s) >= 2:
+        return s[1:-1]
+    if s.startswith("'") and s.endswith("'") and len(s) >= 2:
+        return s[1:-1]
+    low = s.lower()
+    if low in ("true", "yes"):
+        return True
+    if low in ("false", "no"):
+        return False
+    if low in ("null", "~"):
+        return None
+    try:
+        return int(s)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError:
+        pass
+    return s
+
+
+def parse_manifest(text: str) -> Dict[str, Any]:
+    text = text.strip()
+    if text.startswith("{"):
+        return json.loads(text)
+    lines: List[Tuple[int, str]] = []
+    for raw in text.splitlines():
+        if not raw.strip() or raw.lstrip().startswith("#"):
+            continue
+        indent = len(raw) - len(raw.lstrip(" "))
+        lines.append((indent, raw.strip()))
+    obj, rest = _parse_block(lines, 0, 0)
+    return obj
+
+
+def _parse_block(lines, i, indent) -> Tuple[Union[Dict, List], int]:
+    # list block?
+    if i < len(lines) and lines[i][1].startswith("- "):
+        out_l: List[Any] = []
+        while i < len(lines) and lines[i][0] == indent \
+                and lines[i][1].startswith("- "):
+            ind, s = lines[i]
+            item_text = s[2:]
+            if ":" in item_text:
+                # list of mappings: first key inline, rest indented deeper
+                key, _, val = item_text.partition(":")
+                item: Dict[str, Any] = {}
+                if val.strip():
+                    item[key.strip()] = _parse_scalar(val)
+                    i += 1
+                else:
+                    i += 1
+                    sub, i = _parse_block(lines, i, _next_indent(
+                        lines, i, indent))
+                    item[key.strip()] = sub
+                # continuation keys at indent+2
+                while i < len(lines) and lines[i][0] > indent \
+                        and not lines[i][1].startswith("- "):
+                    sub_ind = lines[i][0]
+                    kv, i = _parse_block(lines, i, sub_ind)
+                    if isinstance(kv, dict):
+                        item.update(kv)
+                out_l.append(item)
+            else:
+                out_l.append(_parse_scalar(item_text))
+                i += 1
+        return out_l, i
+    # mapping block
+    out: Dict[str, Any] = {}
+    while i < len(lines):
+        ind, s = lines[i]
+        if ind < indent:
+            break
+        if ind > indent or s.startswith("- "):
+            break
+        key, _, val = s.partition(":")
+        key = key.strip()
+        if val.strip():
+            out[key] = _parse_scalar(val)
+            i += 1
+        else:
+            i += 1
+            if i < len(lines) and lines[i][0] > ind:
+                sub, i = _parse_block(lines, i, lines[i][0])
+                out[key] = sub
+            else:
+                out[key] = None
+    return out, i
+
+
+def _next_indent(lines, i, default):
+    return lines[i][0] if i < len(lines) else default
+
+
+def validate_manifest(m: Dict[str, Any]) -> List[str]:
+    """Schema checks per the paper's manifest contract."""
+    errs = []
+    for req in ("name", "framework"):
+        if req not in m:
+            errs.append(f"missing required field {req!r}")
+    fw = m.get("framework") or {}
+    if isinstance(fw, dict) and "name" not in fw:
+        errs.append("framework.name is required")
+    if "learners" in m and (not isinstance(m["learners"], int)
+                            or m["learners"] < 1):
+        errs.append("learners must be a positive integer")
+    ds = m.get("data_stores")
+    if ds is not None and not isinstance(ds, list):
+        errs.append("data_stores must be a list")
+    return errs

@@ -1,0 +1,214 @@
+"""DLaaS REST API (paper §User Experience: 'interacting with the DLaaS
+REST API, either by directly invoking the REST API endpoints, or by using
+the DLaaS command-line interface').
+
+Endpoints (v1):
+  POST   /v1/models                      {manifest: "<yaml>"} -> model_id
+  GET    /v1/models
+  GET    /v1/models/<id>
+  DELETE /v1/models/<id>
+  POST   /v1/trainings                   {model_id, overrides} -> training_id
+  GET    /v1/trainings
+  GET    /v1/trainings/<id>              status + member states + progress
+  DELETE /v1/trainings/<id>              terminate
+  GET    /v1/trainings/<id>/logs         collected logs
+  GET    /v1/trainings/<id>/logs/stream  chunked live stream (websocket
+                                         analogue of the visualization API)
+  GET    /v1/trainings/<id>/metrics      common JSON-list metric format
+  GET    /v1/trainings/<id>/model        trained weights (binary)
+  GET    /v1/usage                       API metering per user
+
+Auth: ``Authorization: Bearer <user-token>``; the token's user is the
+metering principal. Stdlib-only (ThreadingHTTPServer).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.service.core import DLaaSCore
+
+
+def _user_of(handler) -> str:
+    auth = handler.headers.get("Authorization", "")
+    if auth.startswith("Bearer "):
+        return auth[len("Bearer "):].strip() or "anon"
+    return "anon"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    core: DLaaSCore = None  # set by serve()
+
+    # ---- helpers -----------------------------------------------------------
+    def _json(self, obj, code: int = 200):
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _err(self, code: int, msg: str):
+        self._json({"error": msg}, code)
+
+    def _body(self) -> dict:
+        n = int(self.headers.get("Content-Length", 0) or 0)
+        if n == 0:
+            return {}
+        return json.loads(self.rfile.read(n) or b"{}")
+
+    def log_message(self, *a):  # quiet
+        pass
+
+    # ---- routing -----------------------------------------------------------
+    def do_POST(self):
+        user = _user_of(self)
+        parts = [p for p in self.path.split("/") if p]
+        try:
+            if parts == ["v1", "models"]:
+                body = self._body()
+                return self._json(
+                    self.core.deploy_model(body["manifest"], user), 201)
+            if parts == ["v1", "trainings"]:
+                body = self._body()
+                return self._json(
+                    self.core.create_training(
+                        body["model_id"], body.get("overrides"), user), 201)
+            return self._err(404, f"no route POST {self.path}")
+        except (KeyError, ValueError) as e:
+            return self._err(400, str(e))
+
+    def do_GET(self):
+        user = _user_of(self)
+        parts = [p for p in self.path.split("/") if p]
+        try:
+            if parts == ["v1", "models"]:
+                return self._json(self.core.list_models(user))
+            if len(parts) == 3 and parts[:2] == ["v1", "models"]:
+                m = self.core.get_model(parts[2])
+                return self._json({"model_id": parts[2],
+                                   "manifest": m["manifest"]})
+            if parts == ["v1", "trainings"]:
+                return self._json(self.core.list_trainings(user))
+            if len(parts) == 3 and parts[:2] == ["v1", "trainings"]:
+                return self._json(self.core.training_status(parts[2]))
+            if len(parts) == 4 and parts[3] == "logs":
+                return self._json(
+                    {"logs": self.core.training_logs(parts[2])})
+            if len(parts) == 5 and parts[3] == "logs" \
+                    and parts[4] == "stream":
+                return self._stream_logs(parts[2])
+            if len(parts) == 4 and parts[3] == "metrics":
+                body = self.core.training_metrics(parts[2]).encode()
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
+            if len(parts) == 4 and parts[3] == "model":
+                data = self.core.download_model(parts[2])
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "application/octet-stream")
+                self.send_header("Content-Length", str(len(data)))
+                self.end_headers()
+                self.wfile.write(data)
+                return
+            if parts == ["v1", "usage"]:
+                return self._json(self.core.usage)
+            return self._err(404, f"no route GET {self.path}")
+        except KeyError as e:
+            return self._err(404, str(e))
+        except Exception as e:
+            return self._err(500, f"{type(e).__name__}: {e}")
+
+    def do_DELETE(self):
+        parts = [p for p in self.path.split("/") if p]
+        try:
+            if len(parts) == 3 and parts[1] == "models":
+                self.core.delete_model(parts[2])
+                return self._json({"deleted": parts[2]})
+            if len(parts) == 3 and parts[1] == "trainings":
+                self.core.terminate_training(parts[2])
+                return self._json({"terminated": parts[2]})
+            return self._err(404, f"no route DELETE {self.path}")
+        except KeyError as e:
+            return self._err(404, str(e))
+
+    # ---- live log streaming (chunked; websocket analogue) ------------------
+    def _stream_logs(self, job_id: str, max_s: float = 5.0):
+        self.send_response(200)
+        self.send_header("Content-Type", "text/plain")
+        self.send_header("Transfer-Encoding", "chunked")
+        self.end_headers()
+
+        def chunk(data: bytes):
+            self.wfile.write(f"{len(data):X}\r\n".encode())
+            self.wfile.write(data + b"\r\n")
+            self.wfile.flush()
+
+        sent = 0
+        t0 = time.time()
+        while time.time() - t0 < max_s:
+            logs = self.core.training_logs(job_id)
+            for line in logs[sent:]:
+                chunk((line + "\n").encode())
+            sent = len(logs)
+            st = self.core.lcm.job_state(job_id)
+            if st in ("COMPLETED", "FAILED", "KILLED"):
+                break
+            time.sleep(0.05)
+        chunk(b"")  # terminator is written below
+        # final zero-length chunk per RFC
+        self.wfile.write(b"0\r\n\r\n")
+        self.wfile.flush()
+
+
+class DLaaSServer:
+    """Owns the HTTP server + core; context-manager friendly."""
+
+    def __init__(self, workdir: str, port: int = 0, **core_kw):
+        self.core = DLaaSCore(workdir, **core_kw)
+        handler = type("Handler", (_Handler,), {"core": self.core})
+        self.httpd = ThreadingHTTPServer(("127.0.0.1", port), handler)
+        self.port = self.httpd.server_address[1]
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        daemon=True)
+
+    def start(self) -> "DLaaSServer":
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self.httpd.shutdown()
+        self.core.close()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *a):
+        self.stop()
+
+    @property
+    def url(self) -> str:
+        return f"http://127.0.0.1:{self.port}"
+
+
+def serve(workdir: str, port: int = 8080):  # pragma: no cover
+    srv = DLaaSServer(workdir, port).start()
+    print(f"DLaaS listening on {srv.url}")
+    try:
+        while True:
+            time.sleep(1)
+    except KeyboardInterrupt:
+        srv.stop()
+
+
+if __name__ == "__main__":  # pragma: no cover
+    import sys
+    serve(sys.argv[1] if len(sys.argv) > 1 else "/tmp/dlaas",
+          int(sys.argv[2]) if len(sys.argv) > 2 else 8080)

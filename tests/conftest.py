@@ -1,0 +1,10 @@
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see the real
+# single device; only launch/dryrun.py forces 512 host devices, and
+# multi-device tests spawn subprocesses (tests/util_subproc.py).

@@ -1,0 +1,74 @@
+"""Checkpointing: roundtrip, atomicity, corruption fallback, GC, async."""
+import json
+import shutil
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def ckdir(tmp_path):
+    return str(tmp_path / "ck")
+
+
+def _tree(seed):
+    rng = np.random.RandomState(seed)
+    return {"a": jnp.asarray(rng.randn(4, 8).astype(np.float32)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+            "scalar": jnp.float32(3.25)}
+
+
+def test_roundtrip(ckdir):
+    cm = CheckpointManager(ckdir, async_save=False)
+    t = _tree(0)
+    cm.save(10, t, extra={"step": 10, "note": "x"})
+    out, extra = cm.restore(10, t)
+    assert extra["note"] == "x"
+    np.testing.assert_allclose(out["a"], t["a"])
+    np.testing.assert_array_equal(out["nested"]["b"], t["nested"]["b"])
+
+
+def test_async_save_then_wait(ckdir):
+    cm = CheckpointManager(ckdir, async_save=True)
+    cm.save(1, _tree(1))
+    cm.wait()
+    assert cm.latest_valid() == 1
+
+
+def test_keep_k_gc(ckdir):
+    cm = CheckpointManager(ckdir, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree(s))
+    assert cm.steps() == [3, 4]
+
+
+def test_corruption_falls_back(ckdir):
+    cm = CheckpointManager(ckdir, keep=5, async_save=False)
+    cm.save(1, _tree(1))
+    cm.save(2, _tree(2))
+    # corrupt the newest checkpoint
+    victim = next((Path(ckdir) / "step_0000000002").glob("*.npy"))
+    victim.write_bytes(b"garbage" + victim.read_bytes()[7:])
+    assert cm.latest_valid() == 1
+
+
+def test_partial_write_invisible(ckdir):
+    """A .tmp directory (crash mid-write) is never considered valid."""
+    cm = CheckpointManager(ckdir, async_save=False)
+    cm.save(5, _tree(5))
+    tmp = Path(ckdir) / "step_0000000009.tmp"
+    tmp.mkdir()
+    (tmp / "manifest.json").write_text(json.dumps({"step": 9}))
+    assert cm.latest_valid() == 5
+    assert cm.steps() == [5]
+
+
+def test_restore_missing_leaf_raises(ckdir):
+    cm = CheckpointManager(ckdir, async_save=False)
+    cm.save(1, {"a": jnp.zeros(3)})
+    with pytest.raises(FileNotFoundError):
+        cm.restore(1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})

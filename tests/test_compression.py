@@ -1,0 +1,53 @@
+"""int8 compression: error bounds, error-feedback convergence property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (BLOCK, compress_with_feedback,
+                                    dequantize_int8, quantize_int8,
+                                    wire_bytes)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_quant_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1024,)) * scale
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    # per-block error <= scale/2 = amax/254
+    xb = np.asarray(x).reshape(-1, BLOCK)
+    amax = np.abs(xb).max(axis=1)
+    err = np.abs(np.asarray(back).reshape(-1, BLOCK) - xb)
+    assert (err <= amax[:, None] / 127.0 * 0.5 + 1e-7).all()
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the ACCUMULATED transmitted signal converges
+    to the accumulated true signal (compression is unbiased over time)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    err = jnp.zeros_like(x)
+    sent = jnp.zeros_like(x)
+    for _ in range(50):
+        q, s, err, wire = compress_with_feedback(x, err)
+        sent = sent + wire
+    # mean transmitted per round -> x
+    np.testing.assert_allclose(np.asarray(sent / 50), np.asarray(x),
+                               atol=np.abs(np.asarray(x)).max() / 100)
+
+
+def test_wire_bytes():
+    assert wire_bytes(1024) == 1024 + 4 * 4   # int8 + f32 scale per block
+
+
+def test_quantize_kernel_matches_ref_sweep():
+    from repro.kernels import ops, ref
+    for n in (256, 1024, 8192):
+        for seed in (0, 1):
+            x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+            e = jax.random.normal(jax.random.PRNGKey(seed + 7), (n,)) * .1
+            qk, sk, ek = ops.quantize_ef(x, e)
+            qr, sr, er = ref.quantize_ref(x, e)
+            np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+            np.testing.assert_allclose(sk, sr, rtol=1e-6)
+            np.testing.assert_allclose(ek, er, atol=1e-6)

@@ -1,0 +1,77 @@
+"""Global cursor: mutual exclusion under arbitrary interleavings
+(hypothesis property), epoch wrap, restore monotonicity, thread safety."""
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cursor import GlobalCursor
+from repro.platform.zookeeper import ZooKeeper
+
+
+def _cursor(ds=100):
+    return GlobalCursor(ZooKeeper(), "/cursor", dataset_size=ds)
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(1, 37)),
+                min_size=1, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_exclusive_exact_cover(claims):
+    """Any interleaving of per-learner claims yields chunks that exactly
+    tile [0, total) with no overlap and no gap (the paper's mutual
+    exclusion guarantee)."""
+    ds = 97
+    cur = _cursor(ds)
+    seen = []
+    for _, size in claims:
+        size = min(size, ds)
+        for ch in cur.next_chunk(size):
+            seen.append((ch.epoch * ds + ch.start, ch.epoch * ds + ch.end))
+    seen.sort()
+    pos = 0
+    for a, b in seen:
+        assert a == pos, f"gap or overlap at {pos}: got {a}"
+        assert b > a
+        pos = b
+    assert pos == sum(min(s, ds) for _, s in claims)
+
+
+def test_epoch_wrap_splits():
+    cur = _cursor(10)
+    cur.next_chunk(8)
+    chunks = cur.next_chunk(5)          # 2 left in epoch 0, 3 in epoch 1
+    assert len(chunks) == 2
+    assert (chunks[0].epoch, chunks[0].start, chunks[0].end) == (0, 8, 10)
+    assert (chunks[1].epoch, chunks[1].start, chunks[1].end) == (1, 0, 3)
+
+
+def test_restore_only_forward():
+    cur = _cursor(10)
+    cur.next_chunk(7)
+    cur.restore(0, 3)                   # behind: must not move back
+    assert cur.position() == (0, 7)
+    cur.restore(2, 5)
+    assert cur.position() == (2, 5)
+
+
+def test_threaded_exclusivity():
+    cur = _cursor(1000)
+    out = []
+    lock = threading.Lock()
+
+    def worker():
+        got = []
+        for _ in range(50):
+            got.extend(cur.next_chunk(7))
+        with lock:
+            out.extend(got)
+
+    ts = [threading.Thread(target=worker) for _ in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    spans = sorted((c.epoch * 1000 + c.start, c.epoch * 1000 + c.end)
+                   for c in out)
+    pos = 0
+    for a, b in spans:
+        assert a == pos
+        pos = b
+    assert pos == 8 * 50 * 7

@@ -1,0 +1,85 @@
+"""Metrics service: the paper's six progress indicators + log parsing."""
+from repro.platform.metrics import LogParserService, MetricsService
+
+
+def _svc():
+    return MetricsService()
+
+
+def test_better_than_random():
+    m = _svc()
+    assert m.better_than_random("j", 10) is None
+    m.record("j", "accuracy", 0, 0.05)
+    assert m.better_than_random("j", 10) is False
+    m.record("j", "accuracy", 1, 0.5)
+    assert m.better_than_random("j", 10) is True
+
+
+def test_plateau_detection():
+    m = _svc()
+    for i in range(20):
+        m.record("j", "loss", i, 2.0 - i * 0.05)   # improving
+    assert not m.plateaued("j", window=10)
+    for i in range(20, 40):
+        m.record("j", "loss", i, 1.05)             # flat
+    assert m.plateaued("j", window=10)
+
+
+def test_lr_change_events():
+    m = _svc()
+    for i in range(10):
+        m.record("j", "lr", i, 0.1 if i < 5 else 0.01)
+    ch = m.lr_changes("j")
+    assert len(ch) == 1 and ch[0]["step"] == 5
+
+
+def test_stability():
+    m = _svc()
+    for i in range(30):
+        m.record("j", "accuracy", i, 0.70 + (0.001 if i % 2 else -0.001))
+    assert m.stable("j", window=20)
+    m2 = _svc()
+    for i in range(30):
+        m2.record("j", "accuracy", i, 0.5 + 0.2 * (i % 3))
+    assert not m2.stable("j", window=20)
+
+
+def test_checkpoint_and_validation_events():
+    m = _svc()
+    m.event("j", "checkpoint", 100)
+    m.event("j", "validation", 50, duration_s=1.5)
+    m.event("j", "validation", 150, duration_s=2.5)
+    assert len(m.checkpoints("j")) == 1
+    vc = m.validation_cadence("j")
+    assert vc["count"] == 2 and vc["mean_gap_steps"] == 100
+    assert vc["mean_duration_s"] == 2.0
+
+
+def test_comm_overhead_platform_metric():
+    m = _svc()
+    for i in range(5):
+        m.record("j", "sync_time_s", i, 0.2)
+        m.record("j", "round_time_s", i, 1.0)
+    assert abs(m.comm_overhead("j") - 0.2) < 1e-9
+
+
+def test_log_parser_extensibility():
+    m = _svc()
+    lp = LogParserService(m)
+    n = lp.feed("j", "step=3 loss=1.25 acc=0.5")
+    assert n >= 2
+    assert m.series("j", "loss").values == [1.25]
+    assert m.series("j", "accuracy").values == [0.5]
+    # custom parser: nvidia-smi-style utilization
+    lp.register_regex(r"step[= ](?P<step>\d+).*?gpu_util[= ](?P<u>[\d.]+)",
+                      {"u": "gpu_util"})
+    lp.feed("j", "step=4 gpu_util=87.5")
+    assert m.series("j", "gpu_util").values == [87.5]
+
+
+def test_json_export_format():
+    import json
+    m = _svc()
+    m.record("j", "loss", 0, 1.0)
+    out = json.loads(m.to_json("j"))
+    assert out == [{"metric": "loss", "step": 0, "value": 1.0}]

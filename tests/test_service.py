@@ -1,0 +1,150 @@
+"""REST API + CLI + manifest: the paper's four-step user flow."""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.service.manifest import parse_manifest, validate_manifest
+from repro.service.rest import DLaaSServer
+
+MANIFEST = """
+name: my-mnist-model
+version: "1.0"
+description: tiny training job
+learners: 2
+gpus: 1
+memory: 1024MiB
+steps: 25
+lr: 0.2
+data_stores:
+  - id: objectstore
+    type: softlayer_objectstore
+    training_data:
+      container: my_training_data
+    connection:
+      auth_url: https://example/auth/v1.0
+      user_name: u
+      password: p
+framework:
+  name: repro-mlp
+  d_in: 16
+  n_classes: 4
+"""
+
+
+def _req(url, method="GET", body=None):
+    data = json.dumps(body).encode() if body is not None else None
+    r = urllib.request.Request(url, data=data, method=method)
+    r.add_header("Authorization", "Bearer tester")
+    if data:
+        r.add_header("Content-Type", "application/json")
+    with urllib.request.urlopen(r) as resp:
+        raw = resp.read()
+    try:
+        return json.loads(raw)
+    except json.JSONDecodeError:
+        return raw
+
+
+def test_manifest_parsing():
+    m = parse_manifest(MANIFEST)
+    assert m["name"] == "my-mnist-model"
+    assert m["learners"] == 2
+    assert m["framework"]["name"] == "repro-mlp"
+    ds = m["data_stores"][0]
+    assert ds["id"] == "objectstore"
+    assert ds["training_data"]["container"] == "my_training_data"
+    assert ds["connection"]["user_name"] == "u"
+    assert validate_manifest(m) == []
+
+
+def test_manifest_validation_errors():
+    assert validate_manifest({}) != []
+    errs = validate_manifest({"name": "x", "framework": {},
+                              "learners": 0})
+    assert any("framework.name" in e for e in errs)
+    assert any("learners" in e for e in errs)
+
+
+@pytest.fixture(scope="module")
+def server(tmp_path_factory):
+    wd = str(tmp_path_factory.mktemp("dlaas"))
+    with DLaaSServer(wd) as srv:
+        yield srv
+
+
+def test_rest_four_step_flow(server):
+    # (2) upload the model
+    out = _req(f"{server.url}/v1/models", "POST", {"manifest": MANIFEST})
+    mid = out["model_id"]
+    got = _req(f"{server.url}/v1/models/{mid}")
+    assert got["manifest"]["name"] == "my-mnist-model"
+    # (3) create + monitor training
+    out = _req(f"{server.url}/v1/trainings", "POST", {"model_id": mid})
+    tid = out["training_id"]
+    st = server.core.wait_for(tid, timeout=90)
+    assert st == "COMPLETED"
+    status = _req(f"{server.url}/v1/trainings/{tid}")
+    assert status["steps_done"] >= 25
+    logs = _req(f"{server.url}/v1/trainings/{tid}/logs")["logs"]
+    assert any("loss=" in l for l in logs)
+    metrics = json.loads(
+        _req(f"{server.url}/v1/trainings/{tid}/metrics").decode()
+        if isinstance(_req(f"{server.url}/v1/trainings/{tid}/metrics"),
+                      bytes)
+        else json.dumps(json.loads(
+            urllib.request.urlopen(
+                f"{server.url}/v1/trainings/{tid}/metrics").read())))
+    assert any(r["metric"] == "loss" for r in metrics)
+    # (4) download the trained model
+    blob = urllib.request.urlopen(
+        f"{server.url}/v1/trainings/{tid}/model").read()
+    arr = np.load(__import__("io").BytesIO(blob))
+    assert arr.size > 0
+    # metering counted our calls
+    usage = _req(f"{server.url}/v1/usage")
+    assert usage.get("tester", 0) > 0
+
+
+def test_rest_rejects_bad_manifest(server):
+    import urllib.error
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _req(f"{server.url}/v1/models", "POST",
+             {"manifest": "framework:\n  version: 1\n"})
+    assert ei.value.code == 400
+
+
+def test_rest_overrides(server):
+    out = _req(f"{server.url}/v1/models", "POST", {"manifest": MANIFEST})
+    out = _req(f"{server.url}/v1/trainings", "POST",
+               {"model_id": out["model_id"],
+                "overrides": {"learners": 1, "steps": 5}})
+    tid = out["training_id"]
+    assert server.core.wait_for(tid, timeout=60) == "COMPLETED"
+    assert server.core.training_status(tid)["steps_done"] >= 5
+
+
+def test_cli_against_live_server(server, tmp_path):
+    from repro.service import cli
+    mf = tmp_path / "m.yml"
+    mf.write_text(MANIFEST)
+    import io
+    from contextlib import redirect_stdout
+
+    def run(*args):
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            cli.main(["--url", server.url, *args])
+        return buf.getvalue()
+
+    out = json.loads(run("model", "deploy", "--manifest", str(mf)))
+    mid = out["model_id"]
+    out = json.loads(run("train", "start", "--model", mid,
+                         "--learners", "1", "--steps", "5"))
+    tid = out["training_id"]
+    assert server.core.wait_for(tid, timeout=60) == "COMPLETED"
+    status = json.loads(run("train", "status", "--id", tid))
+    assert status["status"] == "COMPLETED"
+    logs = run("train", "logs", "--id", tid)
+    assert "loss=" in logs

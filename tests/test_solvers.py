@@ -1,0 +1,91 @@
+"""Solver math (local path): convergence of all four DLaaS solvers,
+compression, and the modelavg(H=1) == PSGD(SGD) equivalence."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.solvers import SolverConfig, make_solver
+from repro.optim.optimizers import OptConfig
+
+D, NL, B = 8, 4, 16
+KEY = jax.random.PRNGKey(0)
+W_TRUE = jax.random.normal(KEY, (D,))
+
+
+def loss_fn(params, batch):
+    return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+
+def batches(rng, h):
+    xs = jax.random.normal(rng, (h, NL, B, D))
+    return {"x": xs, "y": xs @ W_TRUE}
+
+
+def _run(scfg, rounds=60, opt=None):
+    s = make_solver(loss_fn, {"w": jnp.zeros((D,))},
+                    opt or OptConfig(name="sgd", lr=0.1), scfg, NL)
+    st = s.init_state({"w": jnp.zeros((D,))})
+    rng = jax.random.PRNGKey(1)
+    m = {}
+    for _ in range(rounds):
+        rng, k = jax.random.split(rng)
+        st, m = s.round(st, batches(k, scfg.rounds_h))
+    return s.params_of(st)["w"], m
+
+
+@pytest.mark.parametrize("scfg", [
+    SolverConfig(name="psgd"),
+    SolverConfig(name="psgd", push_mode="broadcast"),
+    SolverConfig(name="psgd", compress=True),
+    SolverConfig(name="modelavg", comm_every=2),
+    SolverConfig(name="easgd", comm_every=2),
+    SolverConfig(name="downpour", comm_every=2),
+], ids=lambda c: f"{c.name}-{c.push_mode}-H{c.comm_every}"
+                 + ("-q8" if c.compress else ""))
+def test_solver_converges(scfg):
+    w, metrics = _run(scfg)
+    err = float(jnp.linalg.norm(w - W_TRUE))
+    assert err < 0.2, (scfg, err)
+    assert "loss" in metrics
+
+
+def test_modelavg_h1_equals_psgd():
+    w1, _ = _run(SolverConfig(name="psgd"), rounds=5)
+    w2, _ = _run(SolverConfig(name="modelavg", comm_every=1,
+                              local_lr=0.1), rounds=5)
+    assert jnp.allclose(w1, w2, atol=1e-5)
+
+
+def test_downpour_reports_staleness():
+    _, m = _run(SolverConfig(name="downpour", comm_every=2), rounds=3)
+    assert "staleness" in m
+
+
+def test_easgd_divergence_metric_decreases():
+    s = make_solver(loss_fn, {"w": jnp.zeros((D,))},
+                    OptConfig(name="sgd", lr=0.1),
+                    SolverConfig(name="easgd", comm_every=2), NL)
+    st = s.init_state({"w": jnp.zeros((D,))})
+    rng = jax.random.PRNGKey(2)
+    divs = []
+    for _ in range(40):
+        rng, k = jax.random.split(rng)
+        st, m = s.round(st, batches(k, 2))
+        divs.append(float(m["divergence"]))
+    assert divs[-1] < divs[0]
+
+
+def test_psgd_with_adam_server():
+    w, _ = _run(SolverConfig(name="psgd"), rounds=150,
+                opt=OptConfig(name="adamw", lr=0.05, weight_decay=0.0))
+    assert float(jnp.linalg.norm(w - W_TRUE)) < 0.3
+
+
+def test_wire_bytes_asymptotics():
+    """The paper's O(L) vs O(L^2) claim at the byte level."""
+    mk = lambda mode: make_solver(
+        loss_fn, {"w": jnp.zeros((D,))}, OptConfig(name="sgd"),
+        SolverConfig(name="psgd", push_mode=mode), NL)
+    ps = mk("ps").wire_bytes_per_round()
+    bc = mk("broadcast").wire_bytes_per_round()
+    assert bc > ps * (NL - 1) / 2     # broadcast scales with L

@@ -1,0 +1,72 @@
+"""ZooKeeper sim: znodes, ephemerals, sequentials, watches, quorum."""
+import pytest
+
+from repro.platform.zookeeper import (BadVersionError, ConnectionLoss,
+                                      NodeExistsError, NoNodeError,
+                                      ZooKeeper)
+
+
+def test_crud_and_versions():
+    zk = ZooKeeper()
+    zk.create("/a", b"1", makepath=True)
+    data, v = zk.get("/a")
+    assert data == b"1" and v == 0
+    zk.set("/a", b"2", version=0)
+    assert zk.get("/a")[0] == b"2"
+    with pytest.raises(BadVersionError):
+        zk.set("/a", b"3", version=0)
+    with pytest.raises(NodeExistsError):
+        zk.create("/a")
+    zk.delete("/a")
+    with pytest.raises(NoNodeError):
+        zk.get("/a")
+
+
+def test_ephemeral_dies_with_session():
+    zk = ZooKeeper()
+    s = zk.session()
+    zk.create("/job/l0/alive", b"", ephemeral=True, session=s,
+              makepath=True)
+    assert zk.exists("/job/l0/alive")
+    s.expire()
+    assert not zk.exists("/job/l0/alive")
+    assert zk.exists("/job/l0")      # persistent parents survive
+
+
+def test_sequential_nodes():
+    zk = ZooKeeper()
+    zk.ensure("/logs")
+    p1 = zk.create("/logs/l", b"a", sequential=True)
+    p2 = zk.create("/logs/l", b"b", sequential=True)
+    assert p1 != p2
+    assert zk.children("/logs") == sorted([p1.rsplit("/", 1)[1],
+                                           p2.rsplit("/", 1)[1]])
+
+
+def test_watches_fire():
+    zk = ZooKeeper()
+    events = []
+    zk.create("/w", b"", makepath=True)
+    zk.watch("/w", lambda p, e: events.append(e))
+    zk.set("/w", b"x")
+    zk.delete("/w")
+    assert "changed" in events and "deleted" in events
+
+
+def test_quorum_loss_blocks_writes():
+    zk = ZooKeeper(replicas=3)
+    zk.create("/q", b"", makepath=True)
+    zk.kill_replica(0)
+    zk.set("/q", b"still ok")        # 2/3 alive: majority
+    zk.kill_replica(1)
+    with pytest.raises(ConnectionLoss):
+        zk.set("/q", b"nope")
+    zk.restore_replica(0)
+    zk.set("/q", b"back")
+
+
+def test_atomic_increment_is_fetch_and_add():
+    zk = ZooKeeper()
+    assert zk.increment("/ctr", 5) == 0
+    assert zk.increment("/ctr", 3) == 5
+    assert zk.increment("/ctr", 0) == 8

@@ -1,0 +1,22 @@
+"""Run a test snippet in a subprocess with N host devices (XLA_FLAGS must
+be set before jax import, which pytest has already done in-process)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{out.stdout[-4000:]}\n"
+        f"STDERR:\n{out.stderr[-4000:]}")
+    return out.stdout
