@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Tier-1 verification + docs link-check. Plain shell so any CI can call
+# it:   bash scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== docs link-check: every repo path referenced in README.md and" \
+     "docs/ARCHITECTURE.md must exist =="
+missing=0
+for doc in README.md docs/ARCHITECTURE.md; do
+    # backtick-quoted repo paths: src/..., tests/..., examples/..., etc.
+    for p in $(grep -o '`[A-Za-z0-9_./-]*`' "$doc" | tr -d '`' \
+               | grep -E '^(src|tests|examples|benchmarks|docs|scripts)/' \
+               | sed 's:/$::' | sort -u); do
+        if [ ! -e "$p" ]; then
+            echo "MISSING: $p (referenced in $doc)"
+            missing=1
+        fi
+    done
+    # top-level files referenced in docs
+    for p in $(grep -o '`[A-Za-z0-9_.-]*\.\(md\|txt\|ini\|yml\)`' "$doc" \
+               | tr -d '`' | sort -u); do
+        case "$p" in
+            manifest.yml|m.yml) continue ;;   # illustrative names
+        esac
+        if [ ! -e "$p" ]; then
+            echo "MISSING: $p (referenced in $doc)"
+            missing=1
+        fi
+    done
+done
+if [ "$missing" -ne 0 ]; then
+    echo "docs link-check FAILED"
+    exit 1
+fi
+echo "docs link-check OK"
+
+echo "== tier-1 tests =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -59,9 +59,9 @@ class Node:
 
 
 # task states (Marathon-like)
-STAGING, STARTING, RUNNING, FINISHED, FAILED, KILLED, LOST = (
+STAGING, STARTING, RUNNING, FINISHED, FAILED, KILLED, LOST, PREEMPTED = (
     "TASK_STAGING", "TASK_STARTING", "TASK_RUNNING", "TASK_FINISHED",
-    "TASK_FAILED", "TASK_KILLED", "TASK_LOST")
+    "TASK_FAILED", "TASK_KILLED", "TASK_LOST", "TASK_PREEMPTED")
 
 
 @dataclass
@@ -75,6 +75,10 @@ class Task:
     message: str = ""
     # run(task) -> None executes the workload (learner thread entry)
     run: Optional[Callable] = None
+    # set by the scheduler when the task must yield its resources; task
+    # bodies observe it (Watchdog.maybe_preempt) and exit cleanly
+    preempt_event: threading.Event = field(
+        default_factory=threading.Event)
 
 
 @dataclass
@@ -87,6 +91,8 @@ class App:
     tasks: Dict[str, Task] = field(default_factory=dict)
     on_state: Optional[Callable[[Task], None]] = None
     run: Optional[Callable] = None
+    tenant: str = "default"
+    priority: int = 0
 
 
 class Cluster:
@@ -156,26 +162,48 @@ class HealthChecker:
 
 
 class Scheduler:
-    """Marathon-style app/task manager over the cluster."""
+    """Marathon-style app/task manager over the cluster.
 
-    def __init__(self, cluster: Cluster, *, health_checks: bool = True):
+    Multi-tenant: pending tasks live in a FairShareQueue (platform/
+    queue.py) ordered by priority, then deficit-weighted fair-share,
+    then FIFO. When a higher-priority task cannot be placed anywhere,
+    whole lower-priority jobs are preempted (released back to the queue;
+    their learners resume from the last checkpoint on re-placement).
+    """
+
+    def __init__(self, cluster: Cluster, *, health_checks: bool = True,
+                 preemption: bool = True):
+        from repro.platform.queue import FairShareQueue
         self.cluster = cluster
         self.health = HealthChecker(cluster) if health_checks else None
+        self.preemption = preemption
         self.apps: Dict[str, App] = {}
-        self._pending: List[Task] = []
+        self.queue = FairShareQueue()
         self._seq = itertools.count()
         self._lock = threading.RLock()
         self._threads: Dict[str, threading.Thread] = {}
 
     # ---- submission -----------------------------------------------------
-    def submit(self, app: App) -> App:
+    def submit(self, app: App, *, tenant: Optional[str] = None,
+               priority: Optional[int] = None) -> App:
         with self._lock:
-            self.apps[app.app_id] = app
+            if tenant is not None:
+                app.tenant = tenant
+            if priority is not None:
+                app.priority = int(priority)
+            # reject apps whose total demand can never fit in the quota
+            total = Resources(app.resources.cpus * app.count,
+                              app.resources.gpus * app.count,
+                              app.resources.memory_mb * app.count)
+            self.queue.check_admission(app.tenant, total)
             for i in range(app.count):
                 t = Task(task_id=f"{app.app_id}.{i}", app_id=app.app_id,
                          resources=app.resources, run=app.run)
                 app.tasks[t.task_id] = t
-                self._pending.append(t)
+                self.queue.push(t, app.tenant, app.priority)
+            # publish only once tasks is fully populated: monitor() and
+            # REST handlers iterate app.tasks without taking our lock
+            self.apps[app.app_id] = app
         return app
 
     def kill_app(self, app_id: str):
@@ -184,13 +212,39 @@ class Scheduler:
             if not app:
                 return
             for t in app.tasks.values():
-                if t.state in (STAGING, STARTING, RUNNING):
+                if t.state in (STAGING, STARTING, RUNNING, PREEMPTED):
+                    t.preempt_event.set()     # running bodies exit early
+                    self._release(t)
                     self._set_state(t, KILLED, "killed by user/LCM")
-                    if t.node:
-                        self.cluster.release(t.node, t.resources)
-                        t.node = None
-            self._pending = [t for t in self._pending
-                             if t.app_id != app_id]
+            self.queue.remove_app(app_id)
+
+    # ---- multi-tenancy ---------------------------------------------------
+    def configure_tenant(self, name: str, **kw):
+        """Create/update a tenant (weight and/or per-dimension quota);
+        None / omitted fields are left unchanged."""
+        with self._lock:
+            return self.queue.configure_tenant(name, **kw)
+
+    def queue_status(self) -> Dict:
+        with self._lock:
+            return self.queue.status()
+
+    def queue_position(self, app_id: str) -> Optional[int]:
+        with self._lock:
+            return self.queue.position(app_id)
+
+    def check_admission(self, tenant: str, demand: Resources):
+        with self._lock:
+            self.queue.check_admission(tenant, demand)
+
+    def _release(self, t: Task):
+        """Release a task's node resources and credit its tenant."""
+        if t.node:
+            self.cluster.release(t.node, t.resources)
+            t.node = None
+        app = self.apps.get(t.app_id)
+        if app:
+            self.queue.credit(app.tenant, t)
 
     # ---- state machine ----------------------------------------------------
     def _set_state(self, t: Task, state: str, msg: str = ""):
@@ -212,24 +266,35 @@ class Scheduler:
             t = self._find(task_id)
             if t is None:
                 return
-            if t.node:
-                self.cluster.release(t.node, t.resources)
-                t.node = None
-            self._set_state(t, FAILED, msg)
             app = self.apps[t.app_id]
+            if t.state == PREEMPTED:
+                # already requeued by preempt(); only a user error (which
+                # would fail again on restart) terminates it
+                if user_error:
+                    self.queue.remove_task(t.task_id)
+                    self._set_state(t, FAILED, msg)
+                return
+            if t.state in (FINISHED, FAILED, KILLED):
+                return   # terminal: a killed task must not be resurrected
+            self._release(t)
+            self._set_state(t, FAILED, msg)
             if not user_error and t.restarts < app.max_restarts:
                 t.restarts += 1
                 self._set_state(t, STAGING, f"restart #{t.restarts}")
-                self._pending.append(t)
+                self.queue.push(t, app.tenant, app.priority)
 
     def task_finished(self, task_id: str):
         with self._lock:
             t = self._find(task_id)
             if t is None:
                 return
-            if t.node:
-                self.cluster.release(t.node, t.resources)
-                t.node = None
+            if t.state == PREEMPTED:
+                # raced to completion before it noticed the preemption —
+                # honor the result instead of re-running it
+                self.queue.remove_task(t.task_id)
+            elif t.state in (FINISHED, FAILED, KILLED):
+                return   # terminal: don't relabel a killed/failed task
+            self._release(t)
             self._set_state(t, FINISHED)
 
     def _find(self, task_id: str) -> Optional[Task]:
@@ -238,10 +303,84 @@ class Scheduler:
                 return app.tasks[task_id]
         return None
 
+    # ---- preemption ---------------------------------------------------------
+    def preempt(self, task_id: str):
+        """Release a running task back to the queue. The task body sees
+        ``preempt_event`` (via Watchdog.maybe_preempt), exits at the next
+        step, and resumes from its last checkpoint when re-placed."""
+        with self._lock:
+            t = self._find(task_id)
+            if t is None:
+                return
+            if self._preempt_task(t):
+                self.queue.tenant(
+                    self.apps[t.app_id].tenant).preemptions += 1
+
+    def _preempt_task(self, t: Task) -> bool:
+        if t.state not in (STARTING, RUNNING):
+            return False
+        app = self.apps[t.app_id]
+        t.preempt_event.set()
+        self._release(t)
+        self._set_state(t, PREEMPTED, "preempted by higher-priority job")
+        self.queue.push(t, app.tenant, app.priority)
+        return True
+
+    def preempt_app(self, app_id: str):
+        """Preempt a whole job (all running tasks) — gang semantics, so a
+        BSP job never limps along with half its learners evicted. Counts
+        as ONE preemption event for the tenant, however many tasks."""
+        with self._lock:
+            app = self.apps.get(app_id)
+            if not app:
+                return
+            evicted = sum(1 for t in app.tasks.values()
+                          if self._preempt_task(t))
+            if evicted:
+                self.queue.tenant(app.tenant).preemptions += 1
+
+    def _preempt_for(self, entry) -> bool:
+        """Free room for ``entry`` by preempting strictly-lower-priority
+        jobs, lowest priority first, fewest jobs possible. Returns True
+        if enough resources were freed on some node."""
+        res = entry.task.resources
+        free = {n.name: Resources(n.free.cpus, n.free.gpus,
+                                  n.free.memory_mb)
+                for n in self.cluster.nodes.values()
+                if n.alive and not n.draining
+                and (res.gpus == 0 or n.gpu_responsive)}
+        if not free:
+            return False
+        victims = sorted(
+            (a for a in self.apps.values()
+             if a.priority < entry.priority
+             and a.app_id != entry.task.app_id
+             and any(t.state == RUNNING and t.node
+                     for t in a.tasks.values())),
+            key=lambda a: a.priority)
+        chosen = []
+        for app in victims:
+            chosen.append(app)
+            for t in app.tasks.values():
+                if t.state == RUNNING and t.node in free:
+                    free[t.node].add(t.resources)
+            target = next((name for name, f in free.items()
+                           if res.fits(f)), None)
+            if target is not None:
+                # evict only jobs actually holding the target node —
+                # apps visited along the way that contributed nothing
+                # there would lose progress for no resource gain
+                for a in chosen:
+                    if any(t.state == RUNNING and t.node == target
+                           for t in a.tasks.values()):
+                        self.preempt_app(a.app_id)
+                return True
+        return False
+
     # ---- scheduling tick ---------------------------------------------------
     def tick(self):
         """One scheduling round: health probe, node-failure detection,
-        pending placement."""
+        fair-share deficit refresh, queue placement (with preemption)."""
         with self._lock:
             if self.health:
                 self.health.probe()
@@ -252,38 +391,56 @@ class Scheduler:
                 for t in app.tasks.values():
                     if t.state == RUNNING and t.node and \
                             not self.cluster.nodes[t.node].alive:
-                        self.cluster.release(t.node, t.resources)
-                        t.node = None
+                        self._release(t)
                         self._set_state(t, LOST, "node failed")
                         if t.restarts < app.max_restarts:
                             t.restarts += 1
                             self._set_state(t, STAGING,
                                             f"restart #{t.restarts}")
-                            self._pending.append(t)
-            still = []
-            for t in self._pending:
-                if t.state != STAGING:
-                    continue
-                res = t.resources
-                need_gpu = res.gpus > 0
-                node = self.cluster.allocate(
-                    res, schedulable=lambda n: True)
-                if node is None:
-                    still.append(t)
-                    continue
-                t.node = node
-                nd = self.cluster.nodes[node]
-                if need_gpu and not nd.gpu_responsive:
-                    # the colloquium incident: placed on a bad node, the
-                    # container cannot initialize its GPUs
-                    self.cluster.release(node, res)
-                    t.node = None
-                    self._set_state(t, FAILED,
-                                    "GPUs unresponsive on node " + node)
-                    continue
-                self._set_state(t, STARTING)
-                self._launch(t)
-            self._pending = still
+                            self.queue.push(t, app.tenant, app.priority)
+            self.queue.refresh_deficits()
+            self._place_round()
+
+    def _place_round(self):
+        # re-sort after every successful placement so deficit spending
+        # takes effect immediately (strict deficit round-robin)
+        while True:
+            if not any(self._try_place(e) for e in self.queue.ordered()):
+                break
+
+    def _try_place(self, entry) -> bool:
+        t = entry.task
+        if t.state not in (STAGING, PREEMPTED):
+            self.queue.remove(entry)           # stale (killed/failed)
+            return False
+        if not self.queue.within_quota(entry.tenant, t.resources):
+            return False                       # held by tenant quota
+        th = self._threads.get(t.task_id)
+        if th is not None and th.is_alive():
+            return False    # previous incarnation still winding down
+        res = t.resources
+        node = self.cluster.allocate(res, schedulable=lambda n: True)
+        if node is None and self.preemption and self._preempt_for(entry):
+            node = self.cluster.allocate(res, schedulable=lambda n: True)
+        if node is None:
+            return False                       # backfill: try next entry
+        self.queue.remove(entry)
+        self.queue.charge(entry.tenant, t)
+        t.node = node
+        t.preempt_event.clear()
+        nd = self.cluster.nodes[node]
+        if res.gpus > 0 and not nd.gpu_responsive:
+            # the colloquium incident: placed on a bad node, the
+            # container cannot initialize its GPUs
+            self.cluster.release(node, res)
+            t.node = None
+            self.queue.refund(entry.tenant, t)   # don't burn fair share
+            self._set_state(t, FAILED,
+                            "GPUs unresponsive on node " + node)
+            return True
+        self._set_state(t, STARTING)
+        self._launch(t)
+        return True
 
     def _launch(self, t: Task):
         self._set_state(t, RUNNING)
@@ -297,6 +454,8 @@ class Scheduler:
         try:
             t.run(t)
             self.task_finished(t.task_id)
+        except _Preempted:
+            pass    # preempt() already released + requeued the task
         except _UserError as e:
             self.task_failed(t.task_id, str(e), user_error=True)
         except Exception as e:  # infrastructure-ish error -> retry
@@ -314,4 +473,10 @@ class _UserError(Exception):
     """Raised by task bodies for errors in user input/code (no restart)."""
 
 
+class _Preempted(Exception):
+    """Raised inside a task body when the scheduler preempted the task;
+    the task is already back in the queue and resumes from checkpoint."""
+
+
 UserError = _UserError
+Preempted = _Preempted

@@ -19,13 +19,24 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.platform.cluster import (App, Resources, Scheduler, RUNNING,
-                                    FINISHED, FAILED)
+                                    FINISHED, FAILED,
+                                    PREEMPTED as TASK_PREEMPTED,
+                                    STAGING as TASK_STAGING)
 from repro.platform.watchdog import JOB_DONE, JOB_FAILED
 from repro.platform.zookeeper import NoNodeError, ZooKeeper
 
-# job states
-QUEUED, DEPLOYING, PROCESSING, COMPLETED, FAILED_J, KILLED_J = (
-    "QUEUED", "DEPLOYING", "PROCESSING", "COMPLETED", "FAILED", "KILLED")
+# job states (PREEMPTED is non-terminal: the scheduler requeues the
+# job's tasks and they resume from the last checkpoint — bounding the
+# Dependability paper's "restart amplification")
+QUEUED, DEPLOYING, PROCESSING, COMPLETED, FAILED_J, KILLED_J, \
+    PREEMPTED_J = ("QUEUED", "DEPLOYING", "PROCESSING", "COMPLETED",
+                   "FAILED", "KILLED", "PREEMPTED")
+
+
+# footprint of the parameter-server app (deployed for multi-learner
+# jobs); shared with DLaaSCore's admission pre-check so the two can
+# never drift and fail quota mid-deploy
+PS_RESOURCES = Resources(cpus=1.0, gpus=0, memory_mb=512)
 
 
 @dataclass
@@ -39,12 +50,16 @@ class JobSpec:
     min_alive_fraction: float = 0.5
     learner_body: Optional[Callable] = None      # fn(watchdog, member_idx)
     ps_body: Optional[Callable] = None           # fn(watchdog)
+    # multi-tenancy: scheduling principal + priority band
+    tenant: str = "default"
+    priority: int = 0
 
 
 class LifecycleManager:
     def __init__(self, zk: ZooKeeper, scheduler: Scheduler):
         self.zk = zk
         self.scheduler = scheduler
+        self._last_pos: Dict[str, Optional[int]] = {}
         zk.ensure("/dlaas/jobs")
 
     # ---- ZK state helpers (LCM itself is stateless) -----------------------
@@ -70,6 +85,20 @@ class LifecycleManager:
         rec = self._get(job_id, "state") or {}
         return rec.get("state", "UNKNOWN")
 
+    def _persist_queue_pos(self, job_id: str):
+        pos = self.scheduler.queue_position(f"{job_id}-learners")
+        # monitor() runs every tick for every job — only touch ZK when
+        # the position actually moved (the cache is just an optimization;
+        # a recovered LCM simply rewrites once)
+        if self._last_pos.get(job_id) == pos:
+            return
+        self._last_pos[job_id] = pos
+        self._set(job_id, "queue", {"position": pos, "ts": time.time()})
+
+    def queue_info(self, job_id: str) -> Optional[Dict]:
+        """Persisted queue position (None once the job left the queue)."""
+        return self._get(job_id, "queue")
+
     def jobs(self) -> List[str]:
         try:
             return self.zk.children("/dlaas/jobs")
@@ -83,7 +112,8 @@ class LifecycleManager:
         self._set(spec.job_id, "spec", {
             "learners": spec.learners, "gpus": spec.gpus_per_learner,
             "cpus": spec.cpus_per_learner, "memory_mb": spec.memory_mb,
-            "min_alive_fraction": spec.min_alive_fraction})
+            "min_alive_fraction": spec.min_alive_fraction,
+            "tenant": spec.tenant, "priority": spec.priority})
         self.deploy(spec)
 
     def deploy(self, spec: JobSpec):
@@ -95,21 +125,25 @@ class LifecycleManager:
         # paper: deploy the PS first (only for multi-learner jobs)
         if spec.learners > 1 and spec.ps_body is not None:
             ps_app = App(app_id=f"{spec.job_id}-ps",
-                         resources=Resources(cpus=1.0, gpus=0,
-                                             memory_mb=512),
+                         resources=Resources(PS_RESOURCES.cpus,
+                                             PS_RESOURCES.gpus,
+                                             PS_RESOURCES.memory_mb),
                          count=1, run=self._wrap(spec, "ps-0", spec.ps_body))
-            self.scheduler.submit(ps_app)
+            self.scheduler.submit(ps_app, tenant=spec.tenant,
+                                  priority=spec.priority)
         learner_app = App(
             app_id=f"{spec.job_id}-learners", resources=res,
             count=spec.learners,
             run=self._wrap_learner(spec))
-        self.scheduler.submit(learner_app)
+        self.scheduler.submit(learner_app, tenant=spec.tenant,
+                              priority=spec.priority)
 
     def _wrap(self, spec: JobSpec, member: str, body: Callable):
         from repro.platform.watchdog import Watchdog
 
         def run(task):
-            wd = Watchdog(self.zk, spec.job_id, member)
+            wd = Watchdog(self.zk, spec.job_id, member,
+                          preempt_check=task.preempt_event.is_set)
             wd.run(lambda w: body(w))
         return run
 
@@ -118,7 +152,8 @@ class LifecycleManager:
 
         def run(task):
             idx = int(task.task_id.rsplit(".", 1)[1])
-            wd = Watchdog(self.zk, spec.job_id, f"learner-{idx}")
+            wd = Watchdog(self.zk, spec.job_id, f"learner-{idx}",
+                          preempt_check=task.preempt_event.is_set)
             if spec.learner_body is None:
                 wd.run(lambda w: None)
             else:
@@ -158,6 +193,25 @@ class LifecycleManager:
         state = self.job_state(job_id)
         if state in (COMPLETED, FAILED_J, KILLED_J):
             return state
+        lapp = self.scheduler.apps.get(f"{job_id}-learners")
+        if lapp is not None:
+            tstates = [t.state for t in lapp.tasks.values()]
+            if any(s == TASK_PREEMPTED for s in tstates):
+                # scheduler evicted the job; tasks are requeued and will
+                # resume from the last checkpoint when re-placed
+                self._persist_queue_pos(job_id)
+                if state != PREEMPTED_J:
+                    self._set(job_id, "state", {"state": PREEMPTED_J,
+                                                "ts": time.time()})
+                return PREEMPTED_J
+            if tstates and all(s == TASK_STAGING for s in tstates):
+                # nothing placed yet: job is waiting in the fair-share
+                # queue — record its position for GET /v1/queue and ops
+                self._persist_queue_pos(job_id)
+                if state != QUEUED:
+                    self._set(job_id, "state", {"state": QUEUED,
+                                                "ts": time.time()})
+                return QUEUED
         st = self.member_statuses(job_id)
         learners = {m: r for m, r in st.items() if m.startswith("learner")}
         if not learners:

@@ -18,7 +18,7 @@ import time
 import traceback
 from typing import Callable, Optional
 
-from repro.platform.cluster import UserError
+from repro.platform.cluster import Preempted, UserError
 from repro.platform.zookeeper import ZooKeeper
 
 # learner status values (paper: e.g. JOB_FAILED)
@@ -28,11 +28,13 @@ PENDING, DOWNLOADING, TRAINING, CHECKPOINTING, JOB_DONE, JOB_FAILED = (
 
 
 class Watchdog:
-    def __init__(self, zk: ZooKeeper, job_id: str, member: str):
+    def __init__(self, zk: ZooKeeper, job_id: str, member: str,
+                 preempt_check: Optional[Callable[[], bool]] = None):
         self.zk = zk
         self.job_id = job_id
         self.member = member            # e.g. learner-0, ps-0
         self.base = f"/dlaas/jobs/{job_id}/members/{member}"
+        self.preempt_check = preempt_check
         self.session = zk.session()
         zk.ensure(self.base)
         zk.create(f"{self.base}/alive", b"1", ephemeral=True,
@@ -63,6 +65,13 @@ class Watchdog:
         self.zk.create(path + "/l", line.encode(), sequential=True,
                        makepath=True)
 
+    def maybe_preempt(self):
+        """Raise Preempted if the scheduler asked this task to yield.
+        Learner bodies call this at every step boundary so preemption
+        lands between steps — after the last checkpoint, never mid-push."""
+        if self.preempt_check is not None and self.preempt_check():
+            raise Preempted(f"{self.member} preempted")
+
     # ---- supervised execution --------------------------------------------
     def run(self, fn: Callable[["Watchdog"], None]):
         """Run the learner body under supervision."""
@@ -70,6 +79,12 @@ class Watchdog:
             self.set_status(TRAINING)
             fn(self)
             self.set_status(JOB_DONE)
+        except Preempted as e:
+            # not a failure: status returns to PENDING; the scheduler has
+            # already requeued the task and it resumes from checkpoint
+            self.log(f"preempted: {e}")
+            self.set_status(PENDING, "preempted")
+            raise
         except UserError as e:
             # paper: user-input faults -> graceful terminate + JOB_FAILED;
             # LCM terminates the job, no restart.

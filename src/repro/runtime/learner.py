@@ -206,6 +206,9 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
         params = unravel(jnp.asarray(flat))
         t_round = time.time()
         for step in range(start_step, cfg.steps):
+            # step boundary: yield to the scheduler if preempted (the
+            # last checkpoint is on disk; the requeued task resumes there)
+            wd.maybe_preempt()
             if cfg.fail_at_step.get(idx) == step:
                 cfg.fail_at_step.pop(idx)     # transient: fires once
                 wd.log(f"injected crash at step {step}")

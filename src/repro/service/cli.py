@@ -3,12 +3,16 @@ the REST API').
 
   dlaas model deploy  --manifest m.yml
   dlaas model list
-  dlaas train start   --model <id> [--learners N --gpus G ...]
+  dlaas train start   --model <id> [--learners N --gpus G --steps S
+                                    --tenant T --priority P]
   dlaas train list
   dlaas train status  --id <tid>
   dlaas train logs    --id <tid> [--follow]
   dlaas train delete  --id <tid>
   dlaas train download --id <tid> --out model.npy
+  dlaas queue                               # fair-share queue + tenants
+  dlaas tenant list
+  dlaas tenant set    --name T [--weight W --gpus G --cpus C --memory M]
 
 Speaks plain HTTP via urllib; point it at a server with --url.
 """
@@ -53,6 +57,8 @@ def main(argv=None):
     s.add_argument("--learners", type=int)
     s.add_argument("--gpus", type=int)
     s.add_argument("--steps", type=int)
+    s.add_argument("--tenant")
+    s.add_argument("--priority", type=int)
     tsub.add_parser("list")
     for name in ("status", "logs", "delete", "download"):
         p = tsub.add_parser(name)
@@ -61,6 +67,18 @@ def main(argv=None):
             p.add_argument("--out", required=True)
         if name == "logs":
             p.add_argument("--follow", action="store_true")
+
+    sub.add_parser("queue")
+
+    tn = sub.add_parser("tenant")
+    tnsub = tn.add_subparsers(dest="sub", required=True)
+    tnsub.add_parser("list")
+    ts = tnsub.add_parser("set")
+    ts.add_argument("--name", required=True)
+    ts.add_argument("--weight", type=float)      # None = leave unchanged
+    ts.add_argument("--gpus", type=int)
+    ts.add_argument("--cpus", type=float)
+    ts.add_argument("--memory", type=int)
 
     args = ap.parse_args(argv)
     base = args.url.rstrip("/")
@@ -77,9 +95,12 @@ def main(argv=None):
         overrides = {k: getattr(args, k) for k in
                      ("learners", "gpus", "steps")
                      if getattr(args, k) is not None}
-        out = _req(f"{base}/v1/trainings", "POST",
-                   {"model_id": args.model, "overrides": overrides},
-                   args.token)
+        body = {"model_id": args.model, "overrides": overrides}
+        if args.tenant is not None:
+            body["tenant"] = args.tenant
+        if args.priority is not None:
+            body["priority"] = args.priority
+        out = _req(f"{base}/v1/trainings", "POST", body, args.token)
         print(json.dumps(out))
     elif args.cmd == "train" and args.sub == "list":
         print(json.dumps(_req(f"{base}/v1/trainings", token=args.token),
@@ -108,6 +129,24 @@ def main(argv=None):
             f.write(data if isinstance(data, bytes)
                     else json.dumps(data).encode())
         print(f"wrote {args.out}")
+    elif args.cmd == "queue":
+        print(json.dumps(_req(f"{base}/v1/queue", token=args.token),
+                         indent=1))
+    elif args.cmd == "tenant" and args.sub == "list":
+        print(json.dumps(_req(f"{base}/v1/tenants", token=args.token),
+                         indent=1))
+    elif args.cmd == "tenant" and args.sub == "set":
+        body = {"name": args.name}
+        if args.weight is not None:
+            body["weight"] = args.weight
+        if args.gpus is not None:
+            body["quota_gpus"] = args.gpus
+        if args.cpus is not None:
+            body["quota_cpus"] = args.cpus
+        if args.memory is not None:
+            body["quota_memory_mb"] = args.memory
+        print(json.dumps(_req(f"{base}/v1/tenants", "POST", body,
+                              args.token)))
 
 
 if __name__ == "__main__":  # pragma: no cover

@@ -21,7 +21,8 @@ import numpy as np
 from repro.core.cursor import GlobalCursor
 from repro.core.software_ps import SoftwareParameterServer
 from repro.platform.cluster import Cluster, Node, Resources, Scheduler
-from repro.platform.lcm import JobSpec, LifecycleManager
+from repro.platform.lcm import JobSpec, LifecycleManager, PS_RESOURCES
+from repro.platform.queue import QuotaExceeded
 from repro.platform.metrics import LogParserService, MetricsService
 from repro.platform.storage import (LocalFSStore, ObjectStore,
                                     StorageManager)
@@ -40,7 +41,9 @@ def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
 
 class DLaaSCore:
     def __init__(self, workdir: str, *, cluster: Optional[Cluster] = None,
-                 health_checks: bool = True, tick_interval: float = 0.02):
+                 health_checks: bool = True, tick_interval: float = 0.02,
+                 admin_users: Optional[set] = None):
+        self.admin_users = admin_users
         self.zk = ZooKeeper()
         self.cluster = cluster or default_cluster()
         self.scheduler = Scheduler(self.cluster,
@@ -82,6 +85,49 @@ class DLaaSCore:
     def _meter(self, user: str):
         self.usage[user] = self.usage.get(user, 0) + 1
 
+    # ----------------------------------------------------------------- tenants
+    def register_tenant(self, name: str, *, weight: Optional[float] = None,
+                        quota_gpus: Optional[int] = None,
+                        quota_cpus: Optional[float] = None,
+                        quota_memory_mb: Optional[int] = None) -> Dict:
+        """Create/update a tenant: fair-share weight + concurrent-usage
+        quota. None means leave-unchanged; quota dimensions merge into
+        any existing quota (unset dimensions stay as they were)."""
+        t = self.scheduler.configure_tenant(
+            name, weight=weight, quota_cpus=quota_cpus,
+            quota_gpus=quota_gpus, quota_memory_mb=quota_memory_mb)
+        return {"tenant": name, **t.snapshot()}
+
+    def is_admin(self, user: str) -> bool:
+        """Tenant administration guard. The simulation's default trust
+        model is open (tokens are self-asserted metering principals);
+        pass admin_users={...} to restrict POST /v1/tenants."""
+        return self.admin_users is None or user in self.admin_users
+
+    def tenant_usage(self) -> Dict:
+        """Per-tenant quota accounting: concurrent usage, lifetime
+        gpu-seconds, placements and preemptions."""
+        return self.scheduler.queue_status()["tenants"]
+
+    def queue_status(self) -> Dict:
+        """Scheduler queue as seen by users: one row per queued job."""
+        raw = self.scheduler.queue_status()
+        jobs: Dict[str, Dict] = {}
+        for e in raw["entries"]:
+            # app ids are '<training-id>-learners' / '<training-id>-ps'
+            job_id = e["app_id"].rsplit("-", 1)[0]
+            row = jobs.setdefault(job_id, {
+                "training_id": job_id, "tenant": e["tenant"],
+                "priority": e["priority"], "position": e["position"],
+                "tasks_queued": 0, "held_by_quota": False})
+            row["tasks_queued"] += 1
+            row["position"] = min(row["position"], e["position"])
+            row["held_by_quota"] = (row["held_by_quota"]
+                                    or e["held_by_quota"])
+        return {"queue": sorted(jobs.values(),
+                                key=lambda r: r["position"]),
+                "tenants": raw["tenants"]}
+
     # ------------------------------------------------------------------ models
     def deploy_model(self, manifest_text: str, user: str = "anon") -> Dict:
         self._meter(user)
@@ -119,11 +165,16 @@ class DLaaSCore:
 
     # --------------------------------------------------------------- trainings
     def create_training(self, model_id: str, overrides: Optional[Dict] = None,
-                        user: str = "anon") -> Dict:
+                        user: str = "anon", tenant: Optional[str] = None,
+                        priority: Optional[int] = None) -> Dict:
         self._meter(user)
         model = self.get_model(model_id)
         manifest = dict(model["manifest"])
         manifest.update(overrides or {})
+        # scheduling principal: explicit arg > manifest key > the caller
+        tenant = tenant or manifest.get("tenant") or user
+        priority = int(priority if priority is not None
+                       else manifest.get("priority", 0))
         job_id = f"training-{next(self._job_seq):05d}"
         fw = manifest.get("framework") or {}
         fw_cfg = {k: v for k, v in fw.items()
@@ -172,15 +223,38 @@ class DLaaSCore:
             memory_mb=int(str(manifest.get("memory", "1024MiB")
                               ).rstrip("MiB") or 1024),
             learner_body=body,
-            ps_body=(lambda wd: None) if n_learners > 1 else None)
+            ps_body=(lambda wd: None) if n_learners > 1 else None,
+            tenant=tenant, priority=priority)
+        # admission control: reject before any job state is created.
+        # Demand covers learners AND the PS app (deployed for
+        # multi-learner jobs), so deploy can never fail quota mid-way
+        # and the gang can always place concurrently within quota.
+        has_ps = spec.learners > 1 and spec.ps_body is not None
+        self.scheduler.check_admission(tenant, Resources(
+            cpus=(spec.cpus_per_learner * n_learners
+                  + (PS_RESOURCES.cpus if has_ps else 0.0)),
+            gpus=(spec.gpus_per_learner * n_learners
+                  + (PS_RESOURCES.gpus if has_ps else 0)),
+            memory_mb=(spec.memory_mb * n_learners
+                       + (PS_RESOURCES.memory_mb if has_ps else 0))))
         rec = {"training_id": job_id, "model_id": model_id,
-               "user": user, "created": time.time(),
+               "user": user, "tenant": tenant, "priority": priority,
+               "created": time.time(),
                "manifest": manifest, "results": results, "ps": ps,
                "spec": spec}
         with self._lock:
             self.trainings[job_id] = rec
-        self.lcm.submit(spec)
-        return {"training_id": job_id}
+        try:
+            self.lcm.submit(spec)
+        except QuotaExceeded:
+            # quota tightened between the pre-check and deploy: roll
+            # back so no phantom training or orphaned PS app remains
+            with self._lock:
+                self.trainings.pop(job_id, None)
+            self.lcm.kill(job_id)
+            raise
+        return {"training_id": job_id, "tenant": tenant,
+                "priority": priority}
 
     def list_trainings(self, user: str = "anon") -> List[Dict]:
         self._meter(user)
@@ -193,10 +267,17 @@ class DLaaSCore:
         state = self.lcm.monitor(job_id)
         members = self.lcm.member_statuses(job_id)
         loss = self.metrics.series(job_id, "loss")
-        return {"training_id": job_id, "status": state,
-                "members": members,
-                "last_loss": loss.values[-1] if loss.values else None,
-                "steps_done": loss.steps[-1] + 1 if loss.steps else 0}
+        with self._lock:
+            rec = self.trainings.get(job_id, {})
+        out = {"training_id": job_id, "status": state,
+               "tenant": rec.get("tenant"),
+               "priority": rec.get("priority"),
+               "members": members,
+               "last_loss": loss.values[-1] if loss.values else None,
+               "steps_done": loss.steps[-1] + 1 if loss.steps else 0}
+        if state in ("QUEUED", "PREEMPTED"):
+            out["queue"] = self.lcm.queue_info(job_id)
+        return out
 
     def terminate_training(self, job_id: str):
         self.lcm.kill(job_id)

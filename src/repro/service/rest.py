@@ -7,7 +7,10 @@ Endpoints (v1):
   GET    /v1/models
   GET    /v1/models/<id>
   DELETE /v1/models/<id>
-  POST   /v1/trainings                   {model_id, overrides} -> training_id
+  POST   /v1/trainings                   {model_id, overrides, tenant,
+                                          priority} -> training_id
+                                         (429 if the tenant quota can
+                                          never fit the job)
   GET    /v1/trainings
   GET    /v1/trainings/<id>              status + member states + progress
   DELETE /v1/trainings/<id>              terminate
@@ -16,6 +19,11 @@ Endpoints (v1):
                                          analogue of the visualization API)
   GET    /v1/trainings/<id>/metrics      common JSON-list metric format
   GET    /v1/trainings/<id>/model        trained weights (binary)
+  GET    /v1/queue                       fair-share queue + tenant shares
+  GET    /v1/tenants                     per-tenant quota accounting
+  POST   /v1/tenants                     {name, weight, quota_gpus, ...}
+                                         (403 unless the token is in
+                                          core.admin_users, when set)
   GET    /v1/usage                       API metering per user
 
 Auth: ``Authorization: Bearer <user-token>``; the token's user is the
@@ -29,6 +37,7 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
+from repro.platform.queue import QuotaExceeded
 from repro.service.core import DLaaSCore
 
 
@@ -76,8 +85,27 @@ class _Handler(BaseHTTPRequestHandler):
                 body = self._body()
                 return self._json(
                     self.core.create_training(
-                        body["model_id"], body.get("overrides"), user), 201)
+                        body["model_id"], body.get("overrides"), user,
+                        tenant=body.get("tenant"),
+                        priority=body.get("priority")), 201)
+            if parts == ["v1", "tenants"]:
+                if not self.core.is_admin(user):
+                    return self._err(
+                        403, f"user {user!r} may not administer tenants")
+                body = self._body()
+
+                def num(key, cast):
+                    v = body.get(key)
+                    return cast(v) if v is not None else None
+                return self._json(self.core.register_tenant(
+                    body["name"],
+                    weight=num("weight", float),
+                    quota_gpus=num("quota_gpus", int),
+                    quota_cpus=num("quota_cpus", float),
+                    quota_memory_mb=num("quota_memory_mb", int)), 201)
             return self._err(404, f"no route POST {self.path}")
+        except QuotaExceeded as e:
+            return self._err(429, str(e))
         except (KeyError, ValueError) as e:
             return self._err(400, str(e))
 
@@ -118,6 +146,10 @@ class _Handler(BaseHTTPRequestHandler):
                 self.end_headers()
                 self.wfile.write(data)
                 return
+            if parts == ["v1", "queue"]:
+                return self._json(self.core.queue_status())
+            if parts == ["v1", "tenants"]:
+                return self._json(self.core.tenant_usage())
             if parts == ["v1", "usage"]:
                 return self._json(self.core.usage)
             return self._err(404, f"no route GET {self.path}")

@@ -2,6 +2,9 @@
 (hypothesis property), epoch wrap, restore monotonicity, thread safety."""
 import threading
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cursor import GlobalCursor

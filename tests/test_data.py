@@ -1,5 +1,8 @@
 """Data pipeline: determinism, chunk-independence, prefetch loader."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cursor import GlobalCursor
