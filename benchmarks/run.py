@@ -15,6 +15,12 @@ spawns a subprocess with forced host devices, mirroring the dry-run.
   quantize_throughput      gradient compression: MB/s + compression ratio
   rest_api                 paper §API layer: requests/s
   roofline_table           §Roofline summary over results/dryrun artifacts
+  backends                 execution backends (software-ps vs pjit) on one
+                           smoke manifest: steps/s + time-to-first-
+                           checkpoint -> BENCH_backends.json at repo root
+
+Pass bench-name substrings as argv to run a subset, e.g.
+``python benchmarks/run.py backends``.
 """
 import json
 import subprocess
@@ -300,6 +306,52 @@ def bench_rest_api():
         emit("rest_api_deploy", us, f"rps={1e6 / us:.0f}")
 
 
+def bench_backends():
+    """Backend trajectory: the same smoke manifest trained through both
+    execution backends (runtime/backend.py); emits BENCH_backends.json
+    at the repo root with steps/s and time-to-first-checkpoint."""
+    import tempfile
+
+    from repro.service.core import DLaaSCore
+    MAN = ("name: bench-backends\nlearners: 1\ngpus: 1\nsteps: 30\n"
+           "checkpoint_every: 10\nlr: 0.1\noptimizer: sgd\nseed: 0\n"
+           "batch_docs: 4\n"
+           "data:\n  n_docs: 128\n  seq_len: 16\n"
+           "framework:\n  name: repro-lm\n  arch: stablelm-1.6b\n"
+           "  distribution: %s\n")
+    out = {}
+    for backend in ("software-ps", "pjit"):
+        core = DLaaSCore(tempfile.mkdtemp(prefix=f"bench_{backend}_"),
+                         tick_interval=0.005)
+        try:
+            mid = core.deploy_model(MAN % backend)["model_id"]
+            t0 = time.time()
+            tid = core.create_training(mid)["training_id"]
+            status = core.wait_for(tid, timeout=300)
+            wall = time.time() - t0
+            evs = core.metrics.events(tid, "checkpoint")
+            ttfc = evs[0]["ts"] - t0 if evs else None
+            loss = core.metrics.series(tid, "loss")
+            steps = len(loss.values)
+            row = {"status": status, "steps": steps,
+                   "wall_s": round(wall, 3),
+                   "steps_per_s": round(steps / wall, 2),
+                   "time_to_first_checkpoint_s":
+                       round(ttfc, 3) if ttfc is not None else None,
+                   "final_loss": (round(loss.values[-1], 4)
+                                  if loss.values else None)}
+            out[backend] = row
+            emit(f"backend_{backend}", wall / max(steps, 1) * 1e6,
+                 f"steps_per_s={row['steps_per_s']};"
+                 f"ttfc_s={row['time_to_first_checkpoint_s']};"
+                 f"final_loss={row['final_loss']}")
+        finally:
+            core.close()
+    (ROOT / "BENCH_backends.json").write_text(
+        json.dumps({"manifest": "repro-lm/stablelm-1.6b smoke, 30 steps",
+                    "backends": out}, indent=1) + "\n")
+
+
 def bench_roofline_table():
     """Summarise §Roofline over existing dry-run artifacts (if present)."""
     from repro.analysis.roofline import (KERNEL_SCOPES, analyze_file,
@@ -336,13 +388,16 @@ def bench_roofline_table():
          f"cells={len(hlos)};worst={worst[0]}:{worst[1]}")
 
 
-def main() -> None:
+def main(only=None) -> None:
     benches = [
         bench_software_ps, bench_solvers, bench_cursor,
         bench_checkpoint, bench_quantize, bench_kernels,
-        bench_rest_api, bench_scheduler, bench_ps_vs_broadcast,
-        bench_roofline_table,
+        bench_rest_api, bench_backends, bench_scheduler,
+        bench_ps_vs_broadcast, bench_roofline_table,
     ]
+    if only:
+        benches = [b for b in benches
+                   if any(s in b.__name__ for s in only)]
     print("name,us_per_call,derived")
     for b in benches:
         try:
@@ -352,4 +407,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

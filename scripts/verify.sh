@@ -35,5 +35,35 @@ if [ "$missing" -ne 0 ]; then
 fi
 echo "docs link-check OK"
 
+echo "== exception hygiene: no swallowed exceptions (except ...: pass) =="
+python - <<'EOF'
+import pathlib
+import re
+import sys
+
+# 'except:'/'except Exception:' followed by a bare 'pass' silently eats
+# scheduler and learner bugs (PR 2 satellite); narrow except clauses
+# (e.g. NoNodeError) stay allowed.
+pat = re.compile(
+    r"except(\s+(Exception|BaseException))?\s*(as\s+\w+\s*)?"
+    r":\s*(\n\s*)?pass\b")
+bad = []
+for root in ("src", "benchmarks"):
+    for p in sorted(pathlib.Path(root).rglob("*.py")):
+        text = p.read_text()
+        for m in pat.finditer(text):
+            line = text[: m.start()].count("\n") + 1
+            bad.append(f"{p}:{line}")
+if bad:
+    print("swallowed exceptions (except ...: pass) at:")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print("except-pass check OK")
+EOF
+
+echo "== backend-parity + manifest test groups =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_backends.py tests/test_manifest.py
+
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

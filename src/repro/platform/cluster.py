@@ -16,6 +16,7 @@ HealthChecker drains the node first.
 from __future__ import annotations
 
 import itertools
+import sys
 import threading
 import time
 from dataclasses import dataclass, field
@@ -254,8 +255,11 @@ class Scheduler:
         if app and app.on_state:
             try:
                 app.on_state(t)
-            except Exception:
-                pass
+            except Exception as e:
+                # observer bugs must not wedge the scheduler, but they
+                # must be diagnosable
+                print(f"[scheduler] on_state callback for {t.task_id} "
+                      f"failed: {type(e).__name__}: {e}", file=sys.stderr)
 
     def task_failed(self, task_id: str, msg: str = "",
                     user_error: bool = False):

@@ -7,13 +7,18 @@ state lives in ZooKeeper, so a crashed LCM instance can be replaced and
 ``recover()`` resumes where the predecessor left off, and training jobs
 keep running while the LCM is down (decoupling test).
 
-Deployment order follows the paper: the PS app is deployed first; once it
-is RUNNING its address is read back from the scheduler and handed to the
-learners.
+The LCM is backend-agnostic: it deploys an ``ExecutionPlan`` — an ordered
+list of ``TaskGroup``s produced by an execution backend
+(runtime/backend.py). The software-PS backend plans learners + a PS app;
+the pjit backend plans one gang of SPMD workers. Deployment order follows
+the paper: auxiliary groups (the PS app) are deployed first; the primary
+group (learners/workers) last. The legacy ``JobSpec`` entry point is kept
+as a thin adapter that builds the equivalent plan.
 """
 from __future__ import annotations
 
 import json
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -55,6 +60,114 @@ class JobSpec:
     priority: int = 0
 
 
+class JobControl:
+    """Cooperative control channel between the service and task bodies:
+    pause/resume and on-demand checkpoint, observed at step boundaries
+    exactly like preemption. Execution backends hand one of these to
+    every body they plan; the backend's checkpoint/pause/resume hooks
+    flip the events."""
+
+    def __init__(self):
+        self._pause = threading.Event()
+        self._ckpt = threading.Event()
+
+    def pause(self):
+        self._pause.set()
+
+    def resume(self):
+        self._pause.clear()
+
+    @property
+    def paused(self) -> bool:
+        return self._pause.is_set()
+
+    def request_checkpoint(self):
+        self._ckpt.set()
+
+    def take_checkpoint_request(self) -> bool:
+        """Consume a pending checkpoint request (at most one body should
+        act on it — by convention, member index 0)."""
+        if self._ckpt.is_set():
+            self._ckpt.clear()
+            return True
+        return False
+
+    def wait_while_paused(self, should_abort: Optional[Callable] = None):
+        """Block while paused. ``should_abort`` (e.g. Watchdog.
+        maybe_preempt) is polled so a paused task still honors
+        preemption/kill by raising out of the wait."""
+        while self._pause.is_set():
+            if should_abort is not None:
+                should_abort()
+            time.sleep(0.01)
+
+
+@dataclass
+class TaskGroup:
+    """One homogeneous set of tasks of an execution plan (the learners,
+    the PS app, or a pjit worker gang). ``role`` names the members
+    (``<role>-<idx>``) and the scheduler app (``<job>-<role>s``)."""
+    role: str                                   # learner | worker | ps
+    count: int
+    resources: Resources
+    body: Optional[Callable] = None             # fn(watchdog, member_idx)
+
+
+@dataclass
+class ExecutionPlan:
+    """What an execution backend decided to run for one job: the task
+    sets (aux groups such as the PS first, primary group last), the
+    footprint, and the shared control/result channels. The LCM derives
+    everything it deploys, monitors, kills and GCs from this."""
+    job_id: str
+    backend: str = "software-ps"
+    groups: List[TaskGroup] = field(default_factory=list)
+    min_alive_fraction: float = 0.5
+    tenant: str = "default"
+    priority: int = 0
+    results: Dict = field(default_factory=dict)
+    control: Optional[JobControl] = None
+    meta: Dict = field(default_factory=dict)
+
+    def primary(self) -> TaskGroup:
+        """The group whose tasks carry the training (non-PS)."""
+        return next(g for g in self.groups if g.role != "ps")
+
+    def total_resources(self) -> Resources:
+        """Aggregate demand — what admission control must fit."""
+        tot = Resources(cpus=0.0, gpus=0, memory_mb=0)
+        for g in self.groups:
+            tot.cpus += g.resources.cpus * g.count
+            tot.gpus += g.resources.gpus * g.count
+            tot.memory_mb += g.resources.memory_mb * g.count
+        return tot
+
+
+def plan_from_jobspec(spec: JobSpec) -> ExecutionPlan:
+    """Legacy adapter: the software-PS learner/PS shape as an
+    ExecutionPlan (used by LifecycleManager.submit for direct JobSpec
+    callers, e.g. the fault-tolerance tests)."""
+    groups: List[TaskGroup] = []
+    if spec.learners > 1 and spec.ps_body is not None:
+        ps_body = spec.ps_body
+        groups.append(TaskGroup(
+            "ps", 1,
+            Resources(PS_RESOURCES.cpus, PS_RESOURCES.gpus,
+                      PS_RESOURCES.memory_mb),
+            body=lambda wd, idx: ps_body(wd)))
+    learner_body = spec.learner_body
+    groups.append(TaskGroup(
+        "learner", spec.learners,
+        Resources(spec.cpus_per_learner, spec.gpus_per_learner,
+                  spec.memory_mb),
+        body=(None if learner_body is None
+              else (lambda wd, idx: learner_body(wd, idx)))))
+    return ExecutionPlan(
+        job_id=spec.job_id, backend="software-ps", groups=groups,
+        min_alive_fraction=spec.min_alive_fraction,
+        tenant=spec.tenant, priority=spec.priority)
+
+
 class LifecycleManager:
     def __init__(self, zk: ZooKeeper, scheduler: Scheduler):
         self.zk = zk
@@ -85,8 +198,35 @@ class LifecycleManager:
         rec = self._get(job_id, "state") or {}
         return rec.get("state", "UNKNOWN")
 
-    def _persist_queue_pos(self, job_id: str):
-        pos = self.scheduler.queue_position(f"{job_id}-learners")
+    def job_spec(self, job_id: str) -> Dict:
+        """The persisted job spec (backend, groups, footprint, tenancy)."""
+        return self._get(job_id, "spec") or {}
+
+    @staticmethod
+    def group_app_id(job_id: str, role: str) -> str:
+        """Scheduler app id for a task group (PS keeps its historic
+        un-pluralized id)."""
+        return f"{job_id}-ps" if role == "ps" else f"{job_id}-{role}s"
+
+    def _roles(self, job_id: str) -> List[str]:
+        return self.job_spec(job_id).get("groups") or ["ps", "learner"]
+
+    def _app_ids(self, job_id: str) -> List[str]:
+        return [self.group_app_id(job_id, r) for r in self._roles(job_id)]
+
+    def _primary_app(self, job_id: str,
+                     roles: Optional[List[str]] = None) -> str:
+        """App id of the training-carrying group; pass pre-read
+        ``roles`` to avoid a second spec read (monitor's hot path)."""
+        role = next((r for r in (roles if roles is not None
+                                 else self._roles(job_id)) if r != "ps"),
+                    "learner")
+        return self.group_app_id(job_id, role)
+
+    def _persist_queue_pos(self, job_id: str,
+                           primary_app: Optional[str] = None):
+        pos = self.scheduler.queue_position(
+            primary_app or self._primary_app(job_id))
         # monitor() runs every tick for every job — only touch ZK when
         # the position actually moved (the cache is just an optimization;
         # a recovered LCM simply rewrites once)
@@ -107,57 +247,46 @@ class LifecycleManager:
 
     # ---- deployment ---------------------------------------------------------
     def submit(self, spec: JobSpec):
-        self._set(spec.job_id, "state", {"state": QUEUED,
+        """Legacy entry point: a software-PS learner/PS job described by
+        a JobSpec. Routed through the same plan pipeline as backends."""
+        self.submit_plan(plan_from_jobspec(spec))
+
+    def submit_plan(self, plan: ExecutionPlan):
+        p = plan.primary()
+        self._set(plan.job_id, "state", {"state": QUEUED,
                                          "ts": time.time()})
-        self._set(spec.job_id, "spec", {
-            "learners": spec.learners, "gpus": spec.gpus_per_learner,
-            "cpus": spec.cpus_per_learner, "memory_mb": spec.memory_mb,
-            "min_alive_fraction": spec.min_alive_fraction,
-            "tenant": spec.tenant, "priority": spec.priority})
-        self.deploy(spec)
+        self._set(plan.job_id, "spec", {
+            "backend": plan.backend,
+            "groups": [g.role for g in plan.groups],
+            "learners": p.count, "gpus": p.resources.gpus,
+            "cpus": p.resources.cpus, "memory_mb": p.resources.memory_mb,
+            "min_alive_fraction": plan.min_alive_fraction,
+            "tenant": plan.tenant, "priority": plan.priority})
+        self.deploy(plan)
 
-    def deploy(self, spec: JobSpec):
-        self._set(spec.job_id, "state", {"state": DEPLOYING,
+    def deploy(self, plan: ExecutionPlan):
+        """Deploy the plan's task groups in order — auxiliary groups
+        (the PS app) first, as the paper prescribes, primary last."""
+        self._set(plan.job_id, "state", {"state": DEPLOYING,
                                          "ts": time.time()})
-        res = Resources(cpus=spec.cpus_per_learner,
-                        gpus=spec.gpus_per_learner,
-                        memory_mb=spec.memory_mb)
-        # paper: deploy the PS first (only for multi-learner jobs)
-        if spec.learners > 1 and spec.ps_body is not None:
-            ps_app = App(app_id=f"{spec.job_id}-ps",
-                         resources=Resources(PS_RESOURCES.cpus,
-                                             PS_RESOURCES.gpus,
-                                             PS_RESOURCES.memory_mb),
-                         count=1, run=self._wrap(spec, "ps-0", spec.ps_body))
-            self.scheduler.submit(ps_app, tenant=spec.tenant,
-                                  priority=spec.priority)
-        learner_app = App(
-            app_id=f"{spec.job_id}-learners", resources=res,
-            count=spec.learners,
-            run=self._wrap_learner(spec))
-        self.scheduler.submit(learner_app, tenant=spec.tenant,
-                              priority=spec.priority)
+        for g in plan.groups:
+            app = App(app_id=self.group_app_id(plan.job_id, g.role),
+                      resources=g.resources, count=g.count,
+                      run=self._wrap_member(plan.job_id, g))
+            self.scheduler.submit(app, tenant=plan.tenant,
+                                  priority=plan.priority)
 
-    def _wrap(self, spec: JobSpec, member: str, body: Callable):
-        from repro.platform.watchdog import Watchdog
-
-        def run(task):
-            wd = Watchdog(self.zk, spec.job_id, member,
-                          preempt_check=task.preempt_event.is_set)
-            wd.run(lambda w: body(w))
-        return run
-
-    def _wrap_learner(self, spec: JobSpec):
+    def _wrap_member(self, job_id: str, group: TaskGroup):
         from repro.platform.watchdog import Watchdog
 
         def run(task):
             idx = int(task.task_id.rsplit(".", 1)[1])
-            wd = Watchdog(self.zk, spec.job_id, f"learner-{idx}",
+            wd = Watchdog(self.zk, job_id, f"{group.role}-{idx}",
                           preempt_check=task.preempt_event.is_set)
-            if spec.learner_body is None:
+            if group.body is None:
                 wd.run(lambda w: None)
             else:
-                wd.run(lambda w: spec.learner_body(w, idx))
+                wd.run(lambda w: group.body(w, idx))
         return run
 
     # ---- monitoring ---------------------------------------------------------
@@ -193,13 +322,18 @@ class LifecycleManager:
         state = self.job_state(job_id)
         if state in (COMPLETED, FAILED_J, KILLED_J):
             return state
-        lapp = self.scheduler.apps.get(f"{job_id}-learners")
+        # one spec read per pass: monitor() runs every tick for every
+        # job, so roles/primary-app/min_alive all derive from this dict
+        spec = self.job_spec(job_id)
+        roles = spec.get("groups") or ["ps", "learner"]
+        primary_app = self._primary_app(job_id, roles)
+        lapp = self.scheduler.apps.get(primary_app)
         if lapp is not None:
             tstates = [t.state for t in lapp.tasks.values()]
             if any(s == TASK_PREEMPTED for s in tstates):
                 # scheduler evicted the job; tasks are requeued and will
                 # resume from the last checkpoint when re-placed
-                self._persist_queue_pos(job_id)
+                self._persist_queue_pos(job_id, primary_app)
                 if state != PREEMPTED_J:
                     self._set(job_id, "state", {"state": PREEMPTED_J,
                                                 "ts": time.time()})
@@ -207,22 +341,23 @@ class LifecycleManager:
             if tstates and all(s == TASK_STAGING for s in tstates):
                 # nothing placed yet: job is waiting in the fair-share
                 # queue — record its position for GET /v1/queue and ops
-                self._persist_queue_pos(job_id)
+                self._persist_queue_pos(job_id, primary_app)
                 if state != QUEUED:
                     self._set(job_id, "state", {"state": QUEUED,
                                                 "ts": time.time()})
                 return QUEUED
         st = self.member_statuses(job_id)
-        learners = {m: r for m, r in st.items() if m.startswith("learner")}
+        # every non-PS member carries training (learner-i / worker-i)
+        learners = {m: r for m, r in st.items()
+                    if not m.startswith("ps")}
         if not learners:
             return state
-        spec = self._get(job_id, "spec") or {}
         statuses = [r.get("status") for r in learners.values()]
         if any(s == JOB_FAILED and "user" in (r.get("detail") or "")
                for s, r in zip(statuses, learners.values())):
             # user error: terminate the whole job, no restart
-            self.scheduler.kill_app(f"{job_id}-learners")
-            self.scheduler.kill_app(f"{job_id}-ps")
+            for role in roles:
+                self.scheduler.kill_app(self.group_app_id(job_id, role))
             self._set(job_id, "state", {"state": FAILED_J,
                                         "reason": "user error"})
             return FAILED_J
@@ -243,13 +378,18 @@ class LifecycleManager:
     # ---- completion / GC -----------------------------------------------------
     def decommission(self, job_id: str):
         """Paper: 'determine when all learners have finished training,
-        decommission them and reclaim computing resources'."""
-        self.scheduler.kill_app(f"{job_id}-ps")
+        decommission them and reclaim computing resources'. Auxiliary
+        groups (the PS app) are killed; the primary group's tasks have
+        already finished on their own."""
+        primary = self._primary_app(job_id)
+        for app_id in self._app_ids(job_id):
+            if app_id != primary:
+                self.scheduler.kill_app(app_id)
         self._set(job_id, "state", {"state": COMPLETED, "ts": time.time()})
 
     def kill(self, job_id: str):
-        self.scheduler.kill_app(f"{job_id}-learners")
-        self.scheduler.kill_app(f"{job_id}-ps")
+        for app_id in self._app_ids(job_id):
+            self.scheduler.kill_app(app_id)
         self._set(job_id, "state", {"state": KILLED_J, "ts": time.time()})
 
     def gc(self, job_id: str):

@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import math
 import re
+import sys
 import threading
 import time
 from collections import defaultdict
@@ -56,8 +57,10 @@ class MetricsService:
         for cb in self._subs:
             try:
                 cb(job_id, metric, step, value)
-            except Exception:
-                pass
+            except Exception as e:
+                print(f"[metrics] subscriber failed for {job_id}/"
+                      f"{metric}: {type(e).__name__}: {e}",
+                      file=sys.stderr)
 
     def event(self, job_id: str, kind: str, step: int, **kw):
         with self._lock:

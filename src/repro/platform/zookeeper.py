@@ -12,6 +12,7 @@ instance concurrently.
 """
 from __future__ import annotations
 
+import sys
 import threading
 import time
 from dataclasses import dataclass, field
@@ -246,5 +247,6 @@ class ZooKeeper:
         for cb in self._watches.get(path, []):
             try:
                 cb(path, event)
-            except Exception:
-                pass
+            except Exception as e:
+                print(f"[zk] watch callback for {path} failed: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)

@@ -163,8 +163,13 @@ class LearnerJobConfig:
 def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                       cursor: GlobalCursor, storage: StorageManager,
                       metrics: MetricsService,
-                      results: Optional[Dict] = None):
-    """Returns fn(watchdog, learner_idx) run under the watchdog."""
+                      results: Optional[Dict] = None,
+                      control=None):
+    """Returns fn(watchdog, learner_idx) run under the watchdog.
+
+    ``control`` (platform.lcm.JobControl, optional) adds the backend
+    lifecycle hooks: pause/resume and on-demand checkpoint, observed at
+    step boundaries alongside preemption."""
     plugin = PLUGINS[cfg.framework](cfg.framework_cfg)
     corpus = SyntheticCorpus(plugin.dataset_spec(cfg.data_cfg))
 
@@ -204,11 +209,29 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
 
         flat = ps.pull(idx)
         params = unravel(jnp.asarray(flat))
+
+        def save_ckpt(step, params):
+            wd.set_status(CHECKPOINTING)
+            pflat, _ = ravel_pytree(params)
+            epoch, offset = cursor.position()
+            ckpt.save(step, {"flat": np.asarray(pflat)},
+                      extra={"step": step, "epoch": epoch,
+                             "offset": offset})
+            metrics.event(cfg.job_id, "checkpoint", step)
+            wd.set_status(TRAINING)
+
         t_round = time.time()
         for step in range(start_step, cfg.steps):
             # step boundary: yield to the scheduler if preempted (the
-            # last checkpoint is on disk; the requeued task resumes there)
+            # last checkpoint is on disk; the requeued task resumes
+            # there), honor pause, serve on-demand checkpoint requests
             wd.maybe_preempt()
+            if control is not None:
+                control.wait_while_paused(should_abort=wd.maybe_preempt)
+                # only the checkpointing member (idx 0) consumes the
+                # request; others must leave the event set for it
+                if ckpt is not None and control.take_checkpoint_request():
+                    save_ckpt(step, params)
             if cfg.fail_at_step.get(idx) == step:
                 cfg.fail_at_step.pop(idx)     # transient: fires once
                 wd.log(f"injected crash at step {step}")
@@ -251,14 +274,7 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                            time.time() - t_round)
             t_round = time.time()
             if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
-                wd.set_status(CHECKPOINTING)
-                pflat, _ = ravel_pytree(params)
-                epoch, offset = cursor.position()
-                ckpt.save(step + 1, {"flat": np.asarray(pflat)},
-                          extra={"step": step + 1, "epoch": epoch,
-                                 "offset": offset})
-                metrics.event(cfg.job_id, "checkpoint", step + 1)
-                wd.set_status(TRAINING)
+                save_ckpt(step + 1, params)
         # store.sh: upload the trained model
         if idx == 0:
             pflat, _ = ravel_pytree(params)

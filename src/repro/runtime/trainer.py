@@ -107,35 +107,41 @@ class Trainer:
         return b
 
     # ---- loop -----------------------------------------------------------------
+    def step_once(self, batch):
+        """One supervised step (with transient-failure retry + restore);
+        records metrics and advances ``self.step``. This is the seam the
+        pjit execution backend drives with its own data pipeline and
+        watchdog hooks."""
+        tries = 0
+        while True:
+            try:
+                self.params, self.opt_state, loss = self._step_fn(
+                    self.params, self.opt_state, batch)
+                break
+            except Exception:
+                tries += 1
+                if tries > self.tc.max_step_retries:
+                    raise
+                self._restore_latest()
+        loss = float(loss)
+        self.metrics.record(self.tc.job_id, "loss", self.step, loss)
+        self.step += 1
+        return loss
+
     def train(self, steps: int):
         losses = []
         while self.step < steps:
-            batch = self._batch(self.step)
-            tries = 0
-            while True:
-                try:
-                    self.params, self.opt_state, loss = self._step_fn(
-                        self.params, self.opt_state, batch)
-                    break
-                except Exception:
-                    tries += 1
-                    if tries > self.tc.max_step_retries:
-                        raise
-                    self._restore_latest()
-            loss = float(loss)
-            losses.append(loss)
-            self.metrics.record(self.tc.job_id, "loss", self.step, loss)
-            self.step += 1
+            losses.append(self.step_once(self._batch(self.step)))
             if self.step % self.tc.ckpt_every == 0:
                 self.save()
         self.ckpt.wait()
         return losses
 
     # ---- checkpoint / restore ----------------------------------------------
-    def save(self):
+    def save(self, extra: Optional[Dict[str, Any]] = None):
         self.ckpt.save(self.step,
                        {"params": self.params, "opt": self.opt_state},
-                       extra={"step": self.step})
+                       extra={"step": self.step, **(extra or {})})
 
     def _restore_latest(self):
         last = self.ckpt.latest_valid()
@@ -143,7 +149,10 @@ class Trainer:
             return
         self.restore(last)
 
-    def restore(self, step: int):
+    def restore(self, step: int) -> Dict[str, Any]:
+        """Restore params/opt-state; returns the checkpoint's ``extra``
+        metadata (step, plus whatever the caller saved — e.g. the data
+        cursor position)."""
         tmpl = {"params": self.model.abstract_params(),
                 "opt": jax.eval_shape(
                     lambda p: init_opt_state(self.opt, p),
@@ -156,6 +165,7 @@ class Trainer:
         self.params = tree["params"]
         self.opt_state = tree["opt"]
         self.step = int(extra.get("step", step))
+        return extra
 
     # ---- elastic scaling ---------------------------------------------------
     def resume(self, new_dist: Dist) -> "Trainer":

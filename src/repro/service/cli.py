@@ -4,7 +4,8 @@ the REST API').
   dlaas model deploy  --manifest m.yml
   dlaas model list
   dlaas train start   --model <id> [--learners N --gpus G --steps S
-                                    --tenant T --priority P]
+                                    --tenant T --priority P
+                                    --distribution software-ps|pjit]
   dlaas train list
   dlaas train status  --id <tid>
   dlaas train logs    --id <tid> [--follow]
@@ -34,8 +35,8 @@ def _req(url: str, method: str = "GET", body=None, token: str = "cli"):
         payload = r.read()
     try:
         return json.loads(payload)
-    except json.JSONDecodeError:
-        return payload
+    except (json.JSONDecodeError, UnicodeDecodeError):
+        return payload          # binary payload (model download)
 
 
 def main(argv=None):
@@ -59,6 +60,10 @@ def main(argv=None):
     s.add_argument("--steps", type=int)
     s.add_argument("--tenant")
     s.add_argument("--priority", type=int)
+    s.add_argument("--distribution",
+                   choices=["software-ps", "pjit"],
+                   help="execution backend (default: manifest's "
+                        "framework.distribution, else software-ps)")
     tsub.add_parser("list")
     for name in ("status", "logs", "delete", "download"):
         p = tsub.add_parser(name)
@@ -93,7 +98,7 @@ def main(argv=None):
                          indent=1))
     elif args.cmd == "train" and args.sub == "start":
         overrides = {k: getattr(args, k) for k in
-                     ("learners", "gpus", "steps")
+                     ("learners", "gpus", "steps", "distribution")
                      if getattr(args, k) is not None}
         body = {"model_id": args.model, "overrides": overrides}
         if args.tenant is not None:

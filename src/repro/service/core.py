@@ -3,33 +3,33 @@
 
 This object is what the REST API (service/rest.py) and the CLI call into;
 it owns the simulated datacenter, ZooKeeper, scheduler, LCM, storage,
-metrics, and executes real (smoke-scale) JAX training jobs in learner
-threads under watchdog supervision.
+metrics, and executes real (smoke-scale) JAX training jobs under watchdog
+supervision through a pluggable execution backend (runtime/backend.py):
+``software-ps`` learner threads or a ``pjit`` SPMD gang, selected by the
+manifest's ``framework.distribution``.
 """
 from __future__ import annotations
 
 import itertools
 import json
+import sys
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import numpy as np
-
-from repro.core.cursor import GlobalCursor
-from repro.core.software_ps import SoftwareParameterServer
 from repro.platform.cluster import Cluster, Node, Resources, Scheduler
-from repro.platform.lcm import JobSpec, LifecycleManager, PS_RESOURCES
+from repro.platform.lcm import JobSpec, LifecycleManager
 from repro.platform.queue import QuotaExceeded
 from repro.platform.metrics import LogParserService, MetricsService
 from repro.platform.storage import (LocalFSStore, ObjectStore,
                                     StorageManager)
 from repro.platform.zookeeper import NoNodeError, ZooKeeper
-from repro.runtime.learner import (LearnerJobConfig, PLUGINS,
-                                   make_learner_body)
-from repro.service.manifest import parse_manifest, validate_manifest
+from repro.runtime.backend import BackendContext, get_backend
+from repro.runtime.learner import PLUGINS
+from repro.service.manifest import (parse_manifest, resolve_distribution,
+                                    resolve_framework, validate_manifest)
 
 
 def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
@@ -62,6 +62,7 @@ class DLaaSCore:
         self._job_seq = itertools.count(1)
         self._lock = threading.RLock()
         self._stop = threading.Event()
+        self._tick_errors: Dict[str, str] = {}
         self._ticker = threading.Thread(target=self._tick_loop,
                                         args=(tick_interval,), daemon=True)
         self._ticker.start()
@@ -76,11 +77,34 @@ class DLaaSCore:
         while not self._stop.is_set():
             try:
                 self.scheduler.tick()
-                for jid in list(self.trainings):
+            except Exception as e:
+                self._tick_error("scheduler", e)
+            for jid in list(self.trainings):
+                try:
                     self.lcm.monitor(jid)
-            except Exception:
-                pass
+                except Exception as e:
+                    self._tick_error(jid, e)
             time.sleep(interval)
+
+    def _tick_error(self, context: str, exc: Exception):
+        """Scheduler/monitor bugs must be diagnosable, not swallowed:
+        mirror them to stderr (with job context) and into the metrics
+        event stream the log tooling reads. Deduplicated per context —
+        the tick loop runs ~50x/s, so a persistently failing monitor
+        must not grow the event log without bound."""
+        # dedup on exception type, not message text: messages may embed
+        # varying values (reprs, counters) that would defeat the dedup
+        kind = type(exc).__name__
+        if self._tick_errors.get(context) == kind:
+            return
+        self._tick_errors[context] = kind
+        msg = f"{kind}: {exc}"
+        print(f"[tick-loop] {context}: {msg}", file=sys.stderr)
+        try:
+            self.metrics.event(context, "tick_error", -1, error=msg)
+        except Exception as e:
+            print(f"[tick-loop] metrics event failed: {e}",
+                  file=sys.stderr)
 
     def _meter(self, user: str):
         self.usage[user] = self.usage.get(user, 0) + 1
@@ -114,7 +138,8 @@ class DLaaSCore:
         raw = self.scheduler.queue_status()
         jobs: Dict[str, Dict] = {}
         for e in raw["entries"]:
-            # app ids are '<training-id>-learners' / '<training-id>-ps'
+            # app ids are '<training-id>-<group>s' ('-learners',
+            # '-workers') or '<training-id>-ps'
             job_id = e["app_id"].rsplit("-", 1)[0]
             row = jobs.setdefault(job_id, {
                 "training_id": job_id, "tenant": e["tenant"],
@@ -135,8 +160,7 @@ class DLaaSCore:
         errs = validate_manifest(manifest)
         if errs:
             raise ValueError("; ".join(errs))
-        fw = manifest.get("framework") or {}
-        fw_name = fw.get("name") if isinstance(fw, dict) else fw
+        fw_name, _ = resolve_framework(manifest)
         if fw_name not in PLUGINS:
             raise ValueError(f"unsupported framework {fw_name!r}; "
                              f"supported: {sorted(PLUGINS)}")
@@ -176,76 +200,34 @@ class DLaaSCore:
         priority = int(priority if priority is not None
                        else manifest.get("priority", 0))
         job_id = f"training-{next(self._job_seq):05d}"
-        fw = manifest.get("framework") or {}
-        fw_cfg = {k: v for k, v in fw.items()
-                  if k not in ("name", "version")} if isinstance(fw, dict) \
-            else {}
-        n_learners = int(manifest.get("learners", 1))
-        jcfg = LearnerJobConfig(
-            job_id=job_id,
-            framework=fw.get("name") if isinstance(fw, dict) else fw,
-            framework_cfg=fw_cfg,
-            data_cfg=manifest.get("data", {}) or {},
-            n_learners=n_learners,
-            batch_docs=int(manifest.get("batch_docs", 8)),
-            steps=int(manifest.get("steps", 40)),
-            comm_every=int(manifest.get("comm_every", 1)),
-            lr=float(manifest.get("lr", 0.1)),
-            optimizer=str(manifest.get("optimizer", "sgd")),
-            solver=str(manifest.get("solver", "psgd")),
-            seed=int(manifest.get("seed", 0)),
-            checkpoint_dir=f"{self.workdir}/ckpt/{job_id}",
-            checkpoint_every=int(manifest.get("checkpoint_every", 20)),
-            user_error_at=manifest.get("user_error_at"),
-            fail_at_step={int(k): int(v) for k, v in
-                          (manifest.get("fail_at_step") or {}).items()},
-        )
-        plugin = PLUGINS[jcfg.framework](jcfg.framework_cfg)
-        params0 = plugin.init_params(jcfg.seed)
-        from jax.flatten_util import ravel_pytree
-        flat0, _ = ravel_pytree(params0)
-        ps = SoftwareParameterServer(
-            np.asarray(flat0), n_shards=4, n_learners=n_learners,
-            optimizer=(jcfg.optimizer if jcfg.solver in
-                       ("psgd", "downpour") else "average"),
-            lr=jcfg.lr,
-            trigger="on_arrival" if jcfg.solver == "downpour" else "bsp")
-        cursor = GlobalCursor(self.zk, f"/dlaas/jobs/{job_id}/cursor",
-                              dataset_size=int(
-                                  (manifest.get("data") or {}).get(
-                                      "n_docs", 512)))
-        results: Dict[str, Any] = {}
-        body = make_learner_body(jcfg, ps, cursor, self.storage,
-                                 self.metrics, results)
+        # the execution backend owns *how* the job runs (software-PS
+        # learner threads vs. a pjit SPMD gang); the service only picks
+        # it from the manifest and hands over a resource envelope
+        backend = get_backend(resolve_distribution(manifest))
         spec = JobSpec(
-            job_id=job_id, learners=n_learners,
+            job_id=job_id,
+            learners=int(manifest.get("learners", 1)),
             gpus_per_learner=int(manifest.get("gpus", 1)),
             memory_mb=int(str(manifest.get("memory", "1024MiB")
                               ).rstrip("MiB") or 1024),
-            learner_body=body,
-            ps_body=(lambda wd: None) if n_learners > 1 else None,
             tenant=tenant, priority=priority)
+        ctx = BackendContext(zk=self.zk, storage=self.storage,
+                             metrics=self.metrics, workdir=self.workdir)
+        plan = backend.plan(spec, manifest, ctx)
         # admission control: reject before any job state is created.
-        # Demand covers learners AND the PS app (deployed for
-        # multi-learner jobs), so deploy can never fail quota mid-way
-        # and the gang can always place concurrently within quota.
-        has_ps = spec.learners > 1 and spec.ps_body is not None
-        self.scheduler.check_admission(tenant, Resources(
-            cpus=(spec.cpus_per_learner * n_learners
-                  + (PS_RESOURCES.cpus if has_ps else 0.0)),
-            gpus=(spec.gpus_per_learner * n_learners
-                  + (PS_RESOURCES.gpus if has_ps else 0)),
-            memory_mb=(spec.memory_mb * n_learners
-                       + (PS_RESOURCES.memory_mb if has_ps else 0))))
+        # Demand covers the whole plan (learners AND the PS app, or the
+        # full pjit gang), so deploy can never fail quota mid-way and
+        # the gang can always place concurrently within quota.
+        self.scheduler.check_admission(tenant, plan.total_resources())
         rec = {"training_id": job_id, "model_id": model_id,
                "user": user, "tenant": tenant, "priority": priority,
-               "created": time.time(),
-               "manifest": manifest, "results": results, "ps": ps,
-               "spec": spec}
+               "created": time.time(), "backend": backend.name,
+               "manifest": manifest, "results": plan.results,
+               "plan": plan, "spec": spec}
         with self._lock:
             self.trainings[job_id] = rec
         try:
-            self.lcm.submit(spec)
+            rec["handle"] = backend.launch(plan, self.lcm)
         except QuotaExceeded:
             # quota tightened between the pre-check and deploy: roll
             # back so no phantom training or orphaned PS app remains
@@ -254,7 +236,7 @@ class DLaaSCore:
             self.lcm.kill(job_id)
             raise
         return {"training_id": job_id, "tenant": tenant,
-                "priority": priority}
+                "priority": priority, "backend": backend.name}
 
     def list_trainings(self, user: str = "anon") -> List[Dict]:
         self._meter(user)
@@ -272,6 +254,10 @@ class DLaaSCore:
         out = {"training_id": job_id, "status": state,
                "tenant": rec.get("tenant"),
                "priority": rec.get("priority"),
+               # which execution backend runs the job (persisted with
+               # the LCM spec, so it survives a core restart)
+               "backend": (rec.get("backend")
+                           or self.lcm.job_spec(job_id).get("backend")),
                "members": members,
                "last_loss": loss.values[-1] if loss.values else None,
                "steps_done": loss.steps[-1] + 1 if loss.steps else 0}
@@ -282,8 +268,35 @@ class DLaaSCore:
     def terminate_training(self, job_id: str):
         self.lcm.kill(job_id)
 
-    def training_logs(self, job_id: str, member: str = "learner-0"
+    # ---- backend lifecycle hooks (pause/resume/on-demand checkpoint) -----
+    def _handle(self, job_id: str):
+        with self._lock:
+            rec = self.trainings.get(job_id)
+        if rec is None or "handle" not in rec:
+            raise KeyError(job_id)
+        return get_backend(rec["backend"]), rec["handle"]
+
+    def pause_training(self, job_id: str):
+        backend, handle = self._handle(job_id)
+        backend.pause(handle)
+
+    def resume_training(self, job_id: str, **kw):
+        backend, handle = self._handle(job_id)
+        backend.resume(handle, **kw)
+
+    def checkpoint_training(self, job_id: str):
+        """Ask the running job to checkpoint at its next step boundary."""
+        backend, handle = self._handle(job_id)
+        backend.checkpoint(handle)
+
+    def training_logs(self, job_id: str, member: Optional[str] = None
                       ) -> List[str]:
+        if member is None:
+            # first member of the job's primary group (learner-0 for
+            # software-ps, worker-0 for pjit)
+            roles = self.lcm.job_spec(job_id).get("groups") or ["learner"]
+            role = next((r for r in roles if r != "ps"), "learner")
+            member = f"{role}-0"
         base = f"/dlaas/jobs/{job_id}/members/{member}/log"
         try:
             names = self.zk.children(base)

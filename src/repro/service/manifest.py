@@ -110,6 +110,46 @@ def _next_indent(lines, i, default):
     return lines[i][0] if i < len(lines) else default
 
 
+# execution backends a manifest may select (runtime/backend.py registry;
+# kept as a literal here so manifest validation stays dependency-light)
+DISTRIBUTIONS = ("software-ps", "pjit")
+DEFAULT_DISTRIBUTION = "software-ps"
+
+
+def resolve_distribution(m: Dict[str, Any]) -> str:
+    """The execution backend a manifest selects. Precedence: top-level
+    ``distribution`` (handy for REST/CLI overrides) > ``framework.
+    distribution`` > the default (``software-ps``, the paper-faithful
+    path). Raises UserError — the job's fault, not the platform's — on
+    unknown values."""
+    from repro.platform.cluster import UserError
+    fw = m.get("framework") or {}
+    top = m.get("distribution")
+    dist = (top
+            or (fw.get("distribution") if isinstance(fw, dict) else None)
+            or DEFAULT_DISTRIBUTION)
+    if dist not in DISTRIBUTIONS:
+        key = "distribution" if top else "framework.distribution"
+        raise UserError(f"unknown {key} {dist!r}; "
+                        f"supported: {list(DISTRIBUTIONS)}")
+    return dist
+
+
+def resolve_framework(m: Dict[str, Any]
+                      ) -> Tuple[Any, Dict[str, Any]]:
+    """Framework name + plugin config from a manifest. Accepts both the
+    mapping form (``framework: {name: ..., <cfg keys>}``) and the scalar
+    shorthand (``framework: repro-lm``) — every consumer (service core
+    and execution backends) must go through here so the two forms behave
+    identically everywhere."""
+    fw = m.get("framework") or {}
+    if isinstance(fw, dict):
+        cfg = {k: v for k, v in fw.items()
+               if k not in ("name", "version", "distribution")}
+        return fw.get("name"), cfg
+    return fw, {}
+
+
 def validate_manifest(m: Dict[str, Any]) -> List[str]:
     """Schema checks per the paper's manifest contract."""
     errs = []
@@ -119,6 +159,11 @@ def validate_manifest(m: Dict[str, Any]) -> List[str]:
     fw = m.get("framework") or {}
     if isinstance(fw, dict) and "name" not in fw:
         errs.append("framework.name is required")
+    from repro.platform.cluster import UserError
+    try:
+        resolve_distribution(m)
+    except UserError as e:
+        errs.append(str(e))
     if "learners" in m and (not isinstance(m["learners"], int)
                             or m["learners"] < 1):
         errs.append("learners must be a positive integer")

@@ -10,9 +10,13 @@ Endpoints (v1):
   POST   /v1/trainings                   {model_id, overrides, tenant,
                                           priority} -> training_id
                                          (429 if the tenant quota can
-                                          never fit the job)
+                                          never fit the job; overrides
+                                          may set "distribution":
+                                          software-ps|pjit to pick the
+                                          execution backend)
   GET    /v1/trainings
-  GET    /v1/trainings/<id>              status + member states + progress
+  GET    /v1/trainings/<id>              status + member states +
+                                         progress + execution backend
   DELETE /v1/trainings/<id>              terminate
   GET    /v1/trainings/<id>/logs         collected logs
   GET    /v1/trainings/<id>/logs/stream  chunked live stream (websocket
@@ -37,6 +41,7 @@ import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 
+from repro.platform.cluster import UserError
 from repro.platform.queue import QuotaExceeded
 from repro.service.core import DLaaSCore
 
@@ -106,7 +111,9 @@ class _Handler(BaseHTTPRequestHandler):
             return self._err(404, f"no route POST {self.path}")
         except QuotaExceeded as e:
             return self._err(429, str(e))
-        except (KeyError, ValueError) as e:
+        except (KeyError, ValueError, UserError) as e:
+            # UserError: bad manifest input (e.g. unknown
+            # framework.distribution) — the job's fault, HTTP 400
             return self._err(400, str(e))
 
     def do_GET(self):

@@ -1,0 +1,72 @@
+"""Manifest edge cases: the framework.distribution field (execution
+backend selection), JSON manifests, and validation errors."""
+import json
+
+import pytest
+
+from repro.platform.cluster import UserError
+from repro.service.manifest import (DEFAULT_DISTRIBUTION, DISTRIBUTIONS,
+                                    parse_manifest, resolve_distribution,
+                                    validate_manifest)
+
+BASE = {"name": "m", "framework": {"name": "repro-mlp"}}
+
+
+def test_default_backend_selection():
+    assert DEFAULT_DISTRIBUTION == "software-ps"
+    assert resolve_distribution(dict(BASE)) == "software-ps"
+    assert validate_manifest(dict(BASE)) == []
+
+
+def test_explicit_distribution_and_precedence():
+    m = {"name": "m", "framework": {"name": "repro-lm",
+                                    "distribution": "pjit"}}
+    assert resolve_distribution(m) == "pjit"
+    # a top-level key (REST/CLI override path) wins over the framework's
+    m2 = dict(m, distribution="software-ps")
+    assert resolve_distribution(m2) == "software-ps"
+    for d in DISTRIBUTIONS:
+        assert validate_manifest(
+            {"name": "m", "framework": {"name": "x",
+                                        "distribution": d}}) == []
+
+
+def test_unknown_distribution_rejected_with_usererror():
+    m = {"name": "m", "framework": {"name": "repro-lm",
+                                    "distribution": "horovod"}}
+    with pytest.raises(UserError) as ei:
+        resolve_distribution(m)
+    # the error must name the bad value and the supported ones
+    assert "horovod" in str(ei.value)
+    assert "software-ps" in str(ei.value) and "pjit" in str(ei.value)
+    errs = validate_manifest(m)
+    assert any("distribution" in e and "horovod" in e for e in errs)
+
+
+def test_json_manifest_roundtrip():
+    m = {"name": "json-model", "learners": 2,
+         "framework": {"name": "repro-lm", "arch": "stablelm-1.6b",
+                       "distribution": "pjit"},
+         "data": {"n_docs": 64, "seq_len": 16}}
+    parsed = parse_manifest(json.dumps(m))
+    assert parsed == m
+    assert validate_manifest(parsed) == []
+    assert resolve_distribution(parsed) == "pjit"
+
+
+def test_json_manifest_bad_distribution():
+    parsed = parse_manifest(json.dumps(
+        {"name": "x", "framework": {"name": "y",
+                                    "distribution": "mpi"}}))
+    assert validate_manifest(parsed) != []
+    with pytest.raises(UserError):
+        resolve_distribution(parsed)
+
+
+def test_yaml_distribution_key_parses():
+    m = parse_manifest("name: x\n"
+                       "framework:\n"
+                       "  name: repro-lm\n"
+                       "  distribution: pjit\n")
+    assert m["framework"]["distribution"] == "pjit"
+    assert resolve_distribution(m) == "pjit"
