@@ -18,9 +18,16 @@ spawns a subprocess with forced host devices, mirroring the dry-run.
   backends                 execution backends (software-ps vs pjit) on one
                            smoke manifest: steps/s + time-to-first-
                            checkpoint -> BENCH_backends.json at repo root
+  ps_dataplane             software-PS data plane: compression none vs
+                           int8 on the same smoke manifest: steps/s,
+                           bytes on wire, fused-aggregation ms/round,
+                           final-loss delta -> BENCH_ps_dataplane.json
+                           (env: PS_DATAPLANE_STEPS, PS_DATAPLANE_OUT
+                           for the scripts/verify.sh smoke invocation)
 
 Pass bench-name substrings as argv to run a subset, e.g.
-``python benchmarks/run.py backends``.
+``python benchmarks/run.py backends`` or
+``python benchmarks/run.py ps-dataplane``.
 """
 import json
 import subprocess
@@ -349,7 +356,83 @@ def bench_backends():
             core.close()
     (ROOT / "BENCH_backends.json").write_text(
         json.dumps({"manifest": "repro-lm/stablelm-1.6b smoke, 30 steps",
+                    "note": ("both backends measured in one process on "
+                             "the same machine — compare within a file, "
+                             "not across commits: container speed varies "
+                             "several-fold between runs, and the jax "
+                             "persistent compile cache (DLAAS_JAX_CACHE) "
+                             "makes repeat invocations warm-start"),
                     "backends": out}, indent=1) + "\n")
+
+
+def bench_ps_dataplane():
+    """Data-plane trajectory: the backends smoke manifest through the
+    software-PS with compression none vs int8. Emits
+    BENCH_ps_dataplane.json with steps/s, bytes on the wire (pre/post
+    compression), fused-aggregation ms/round and the compressed-vs-
+    uncompressed final-loss delta. ``PS_DATAPLANE_STEPS`` /
+    ``PS_DATAPLANE_OUT`` shrink + redirect it for CI smoke runs."""
+    import os
+    import tempfile
+
+    from repro.service.core import DLaaSCore
+    steps = int(os.environ.get("PS_DATAPLANE_STEPS", "30"))
+    out_path = Path(os.environ.get("PS_DATAPLANE_OUT",
+                                   ROOT / "BENCH_ps_dataplane.json"))
+    MAN = ("name: bench-ps-dataplane\nlearners: 1\ngpus: 1\n"
+           f"steps: {steps}\n"
+           "checkpoint_every: 1000000\nlr: 0.1\noptimizer: sgd\nseed: 0\n"
+           "batch_docs: 4\n"
+           "data:\n  n_docs: 128\n  seq_len: 16\n"
+           "framework:\n  name: repro-lm\n  arch: stablelm-1.6b\n"
+           "  distribution: software-ps\n  compression: %s\n")
+    out = {}
+    for comp in ("none", "int8"):
+        core = DLaaSCore(tempfile.mkdtemp(prefix=f"bench_dp_{comp}_"),
+                         tick_interval=0.005)
+        try:
+            mid = core.deploy_model(MAN % comp)["model_id"]
+            t0 = time.time()
+            tid = core.create_training(mid)["training_id"]
+            status = core.wait_for(tid, timeout=300)
+            wall = time.time() - t0
+            loss = core.metrics.series(tid, "loss")
+            dp = core.training_status(tid).get("data_plane") or {}
+            n = len(loss.values)
+            # per-step loss swings ~±5% with batch noise; the quality
+            # comparison uses a tail-window mean so it measures the
+            # trajectory, not one noisy sample
+            tail = loss.values[-min(10, max(1, n // 3)):]
+            row = {"status": status, "steps": n,
+                   "wall_s": round(wall, 3),
+                   "steps_per_s": round(n / wall, 2),
+                   "final_loss": (round(sum(tail) / len(tail), 4)
+                                  if tail else None),
+                   "last_step_loss": (round(loss.values[-1], 4)
+                                      if loss.values else None),
+                   "bytes_pushed_wire": dp.get("bytes_pushed_wire"),
+                   "bytes_pushed_dense": dp.get("bytes_pushed_dense"),
+                   "compression_ratio": dp.get("compression_ratio"),
+                   "agg_ms_per_round": dp.get("agg_ms_per_round")}
+            out[comp] = row
+            emit(f"ps_dataplane_{comp}", wall / max(n, 1) * 1e6,
+                 f"steps_per_s={row['steps_per_s']};"
+                 f"wire_ratio={row['compression_ratio']};"
+                 f"agg_ms={row['agg_ms_per_round']};"
+                 f"final_loss={row['final_loss']}")
+        finally:
+            core.close()
+    summary = {"manifest": f"repro-lm/stablelm-1.6b smoke, {steps} steps",
+               "pr2_baseline_steps_per_s": 3.49,
+               "modes": out}
+    ln, li = out["none"]["final_loss"], out["int8"]["final_loss"]
+    if ln and li:
+        summary["final_loss_rel_delta"] = round(abs(li - ln) / abs(ln), 4)
+    wn = out["int8"]
+    if wn["bytes_pushed_wire"]:
+        summary["wire_bytes_reduction"] = round(
+            wn["bytes_pushed_dense"] / wn["bytes_pushed_wire"], 3)
+    out_path.write_text(json.dumps(summary, indent=1) + "\n")
 
 
 def bench_roofline_table():
@@ -392,10 +475,11 @@ def main(only=None) -> None:
     benches = [
         bench_software_ps, bench_solvers, bench_cursor,
         bench_checkpoint, bench_quantize, bench_kernels,
-        bench_rest_api, bench_backends, bench_scheduler,
-        bench_ps_vs_broadcast, bench_roofline_table,
+        bench_rest_api, bench_backends, bench_ps_dataplane,
+        bench_scheduler, bench_ps_vs_broadcast, bench_roofline_table,
     ]
     if only:
+        only = [s.replace("-", "_") for s in only]
         benches = [b for b in benches
                    if any(s in b.__name__ for s in only)]
     print("name,us_per_call,derived")

@@ -61,6 +61,14 @@ if bad:
 print("except-pass check OK")
 EOF
 
+echo "== ps-dataplane benchmark smoke (compression none vs int8) =="
+# tiny invocation of the data-plane bench: proves both wire formats
+# train end-to-end; writes to a temp file so the committed
+# BENCH_ps_dataplane.json (full 30-step run) is not clobbered
+PS_DATAPLANE_STEPS=6 PS_DATAPLANE_OUT="$(mktemp /tmp/ps_dataplane.XXXXXX.json)" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/run.py ps-dataplane
+
 echo "== backend-parity + manifest test groups =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_backends.py tests/test_manifest.py

@@ -7,16 +7,33 @@ carried in an error-feedback buffer so the compression is unbiased over
 time (Seide et al. style).
 
 This is the pure-jnp reference; kernels/quantize.py is the Pallas TPU
-mirror validated against it.
+mirror validated against it. ``make_compressor`` picks between the two
+(kernel on a TPU backend, jit'd reference elsewhere) and
+``CompressedPush`` is the wire format the software PS moves.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 BLOCK = 256
+
+
+@dataclass(frozen=True)
+class CompressedPush:
+    """Wire format of a compressed PS push: int8 payload + one f32 scale
+    per block, ~4x fewer bytes than the dense f32 vector."""
+    q: np.ndarray           # int8, padded length (multiple of BLOCK)
+    scales: np.ndarray      # f32, len(q) // BLOCK
+    dense_nbytes: int       # size of the vector this stands in for
+
+    @property
+    def wire_nbytes(self) -> int:
+        return self.q.nbytes + self.scales.nbytes
 
 
 def pad_to_block(n: int, block: int = BLOCK) -> int:
@@ -53,3 +70,21 @@ def compress_with_feedback(x, err, block: int = BLOCK):
 def wire_bytes(n: int, block: int = BLOCK) -> int:
     """Bytes on the wire for an n-element compressed push."""
     return n + 4 * (n // block)
+
+
+def make_compressor(block: int = BLOCK, use_tpu: bool = None):
+    """Build the push-path compressor ``fn(x, err) -> (q, scales,
+    new_err)``: the fused Pallas kernel when running on a TPU backend,
+    the jit'd jnp reference otherwise (the two are validated against
+    each other in tests/test_compression.py). ``x`` must be a multiple
+    of ``block`` long — the PS shard layout guarantees this."""
+    if use_tpu is None:
+        use_tpu = jax.default_backend() == "tpu"
+    if use_tpu:
+        from repro.kernels.quantize import quantize_ef
+
+        return jax.jit(lambda x, e: quantize_ef(x, e, qblock=block))
+    # one definition of the scheme: drop the wire view (its math is part
+    # of the residual anyway, so nothing extra is computed under jit)
+    return jax.jit(
+        lambda x, e: compress_with_feedback(x, e, block)[:3])

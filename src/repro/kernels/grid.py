@@ -1,0 +1,19 @@
+"""Shared grid-sizing helper for the 1-D Pallas kernels.
+
+The PS shard layout guarantees lengths that are multiples of the
+quantization block (256); kernels want the largest block <= the
+requested one that divides the full length (and, where scales are
+per-block, is itself a multiple of that quantization block).
+"""
+from __future__ import annotations
+
+
+def fit_block(f: int, block: int, multiple: int = 1) -> int:
+    """Largest usable grid block: <= ``block``, divides ``f``, and is a
+    multiple of ``multiple``. ``f`` must itself be a multiple of
+    ``multiple`` (asserted) so halving toward it always terminates."""
+    assert multiple >= 1 and f % multiple == 0, (f, multiple)
+    block = max(multiple, min(block, f))
+    while f % block or block % multiple:
+        block = max(multiple, block // 2)
+    return block

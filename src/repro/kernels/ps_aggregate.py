@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.grid import fit_block
+
 
 def _agg_kernel(g_ref, p_ref, m_ref, v_ref, step_ref,
                 po_ref, mo_ref, vo_ref, *,
@@ -52,6 +54,11 @@ def _agg_kernel(g_ref, p_ref, m_ref, v_ref, step_ref,
         po_ref[...] = (p + beta * g).astype(po_ref.dtype)
         mo_ref[...] = m_ref[...]
         vo_ref[...] = v_ref[...]
+    elif solver == "average":
+        # model averaging: the pushed slots carry weights, not grads
+        po_ref[...] = g.astype(po_ref.dtype)
+        mo_ref[...] = m_ref[...]
+        vo_ref[...] = v_ref[...]
     else:
         raise ValueError(solver)
 
@@ -66,8 +73,7 @@ def ps_aggregate(grads, params, m, v, step, *, solver: str = "adam",
     Returns (new_params, new_m, new_v): one fused aggregation+update pass.
     """
     nl, f = grads.shape
-    block = min(block, f)
-    assert f % block == 0
+    block = fit_block(f, block)
     nb = f // block
     kernel = functools.partial(
         _agg_kernel, solver=solver, lr=lr, b1=b1, b2=b2, eps=eps,

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.grid import fit_block
+
 QBLOCK = 256
 
 
@@ -34,8 +36,7 @@ def quantize_ef(x, err, *, qblock: int = QBLOCK, block: int = 4096,
                 interpret: bool = False):
     """x/err (F,) -> (q int8 (F,), scales (F/qblock,), new_err (F,))."""
     f = x.shape[0]
-    block = min(block, f)
-    assert f % block == 0 and block % qblock == 0
+    block = fit_block(f, block, multiple=qblock)
     nb = f // block
     kernel = functools.partial(_quant_kernel, qblock=qblock)
     return pl.pallas_call(
@@ -67,7 +68,7 @@ def _dequant_kernel(q_ref, s_ref, x_ref, *, qblock: int):
 def dequantize(q, scales, *, qblock: int = QBLOCK, block: int = 4096,
                interpret: bool = False):
     f = q.shape[0]
-    block = min(block, f)
+    block = fit_block(f, block, multiple=qblock)
     nb = f // block
     kernel = functools.partial(_dequant_kernel, qblock=qblock)
     return pl.pallas_call(

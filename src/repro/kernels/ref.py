@@ -1,9 +1,12 @@
 """Pure-jnp oracles for every Pallas kernel (per-kernel allclose tests
-sweep shapes/dtypes against these)."""
+sweep shapes/dtypes against these), plus the in-place numpy twin of the
+fused PS aggregation that the software parameter server runs on hosts
+without a TPU."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compression import dequantize_int8, quantize_int8
 from repro.models.attention import flash_attention_ref
@@ -78,7 +81,45 @@ def ps_aggregate_ref(grads, params, m, v, step, *, solver="adam",
                 mn.astype(m.dtype), vn.astype(v.dtype))
     if solver == "easgd_center":
         return (p + beta * g).astype(params.dtype), m, v
+    if solver == "average":
+        # model averaging: the pushed slots carry weights, not grads
+        return g.astype(params.dtype), m, v
     raise ValueError(solver)
+
+
+def ps_aggregate_np(grads, params, m, v, step, *, solver="adam",
+                    lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, momentum=0.9,
+                    beta=0.9):
+    """In-place numpy twin of ``ps_aggregate_ref`` for the software-PS
+    hot path: one fused mean-aggregation + solver pass over the shard
+    with no device round-trip. Mutates ``params``/``m``/``v`` (f32
+    views into the PS state block); validated against the jnp oracle in
+    tests/test_kernels.py."""
+    g = np.mean(grads, axis=0, dtype=np.float32)
+    if solver == "sgd":
+        params -= lr * g
+    elif solver == "momentum":
+        m *= momentum
+        m += g
+        params -= lr * m
+    elif solver == "adam":
+        m *= b1
+        m += (1 - b1) * g
+        v *= b2
+        v += (1 - b2) * g * g
+        mh = m / np.float32(1 - b1 ** step)
+        vh = v / np.float32(1 - b2 ** step)
+        np.sqrt(vh, out=vh)
+        vh += eps
+        mh /= vh
+        mh *= lr
+        params -= mh
+    elif solver == "easgd_center":
+        params += beta * g
+    elif solver == "average":
+        params[:] = g
+    else:
+        raise ValueError(solver)
 
 
 def quantize_ref(x, err):

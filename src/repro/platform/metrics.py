@@ -48,6 +48,8 @@ class MetricsService:
         self._series: Dict[str, Dict[str, Series]] = defaultdict(
             lambda: defaultdict(Series))
         self._events: Dict[str, List[Dict]] = defaultdict(list)
+        self._counters: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: defaultdict(float))
         self._subs: List[Callable[[str, str, int, float], None]] = []
 
     # ---- ingestion ----------------------------------------------------------
@@ -61,6 +63,16 @@ class MetricsService:
                 print(f"[metrics] subscriber failed for {job_id}/"
                       f"{metric}: {type(e).__name__}: {e}",
                       file=sys.stderr)
+
+    def incr(self, job_id: str, counter: str, value: float = 1.0):
+        """Atomic monotonic counter — safe against concurrent learners
+        (a bare ``+=`` on a shared attribute drops increments)."""
+        with self._lock:
+            self._counters[job_id][counter] += value
+
+    def counters(self, job_id: str) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._counters[job_id])
 
     def event(self, job_id: str, kind: str, step: int, **kw):
         with self._lock:

@@ -127,16 +127,17 @@ class SoftwarePSBackend(ExecutionBackend):
 
     def plan(self, spec: JobSpec, manifest: Dict,
              ctx: BackendContext) -> ExecutionPlan:
-        from jax.flatten_util import ravel_pytree
         from repro.core.cursor import GlobalCursor
         from repro.core.software_ps import SoftwareParameterServer
         from repro.runtime.learner import (LearnerJobConfig, PLUGINS,
                                            make_learner_body)
-        from repro.service.manifest import resolve_framework
+        from repro.service.manifest import (resolve_framework,
+                                            resolve_ps_options)
         fw_name, fw_cfg = resolve_framework(manifest)
         if fw_name not in PLUGINS:
             raise UserError(f"unsupported framework {fw_name!r}; "
                             f"supported: {sorted(PLUGINS)}")
+        compression, ps_shards = resolve_ps_options(manifest)
         jcfg = LearnerJobConfig(
             job_id=spec.job_id,
             framework=fw_name,
@@ -149,6 +150,7 @@ class SoftwarePSBackend(ExecutionBackend):
             lr=float(manifest.get("lr", 0.1)),
             optimizer=str(manifest.get("optimizer", "sgd")),
             solver=str(manifest.get("solver", "psgd")),
+            compression=compression,
             seed=int(manifest.get("seed", 0)),
             checkpoint_dir=f"{ctx.workdir}/ckpt/{spec.job_id}",
             checkpoint_every=int(manifest.get("checkpoint_every", 20)),
@@ -157,13 +159,24 @@ class SoftwarePSBackend(ExecutionBackend):
                           (manifest.get("fail_at_step") or {}).items()},
         )
         plugin = PLUGINS[jcfg.framework](jcfg.framework_cfg)
-        flat0, _ = ravel_pytree(plugin.init_params(jcfg.seed))
+        # warm the fused train-step compile in the background so it
+        # overlaps the init compile below and the deployment; the
+        # learner's first step then finds it ready (or waits on it)
+        if hasattr(plugin, "warm_async"):
+            plugin.warm_async(jcfg.batch_docs, jcfg.data_cfg)
+        # flat_state caches the (seed -> flat weights) result, and the
+        # plugin is handed to the learner body below — the model is
+        # initialized and jitted once per job, not once per layer
+        flat0 = plugin.flat_state(jcfg.seed)
         ps = SoftwareParameterServer(
-            np.asarray(flat0), n_shards=4, n_learners=spec.learners,
+            flat0, n_shards=ps_shards,
+            n_learners=spec.learners,
             optimizer=(jcfg.optimizer if jcfg.solver in
                        ("psgd", "downpour") else "average"),
             lr=jcfg.lr,
-            trigger="on_arrival" if jcfg.solver == "downpour" else "bsp")
+            trigger="on_arrival" if jcfg.solver == "downpour" else "bsp",
+            compression=compression,
+            metrics=ctx.metrics, job_id=spec.job_id)
         cursor = GlobalCursor(
             ctx.zk, f"/dlaas/jobs/{spec.job_id}/cursor",
             dataset_size=int((manifest.get("data") or {}).get(
@@ -171,7 +184,8 @@ class SoftwarePSBackend(ExecutionBackend):
         results: Dict = {}
         control = JobControl()
         body = make_learner_body(jcfg, ps, cursor, ctx.storage,
-                                 ctx.metrics, results, control=control)
+                                 ctx.metrics, results, control=control,
+                                 plugin=plugin)
         groups = []
         if spec.learners > 1:
             groups.append(TaskGroup(
@@ -188,7 +202,8 @@ class SoftwarePSBackend(ExecutionBackend):
             min_alive_fraction=spec.min_alive_fraction,
             tenant=spec.tenant, priority=spec.priority,
             results=results, control=control,
-            meta={"ps": ps, "framework": fw_name, "steps": jcfg.steps})
+            meta={"ps": ps, "framework": fw_name, "steps": jcfg.steps,
+                  "compression": compression, "ps_shards": ps_shards})
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import io
 import json
+import sys
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
@@ -35,6 +37,30 @@ from repro.platform.watchdog import CHECKPOINTING, TRAINING, Watchdog
 # ---------------------------------------------------------------------------
 
 PLUGINS: Dict[str, Callable] = {}
+
+
+def _flat_io(abstract_tree):
+    """(ravel, unravel) for a fixed pytree layout, built from abstract
+    shapes (``jax.eval_shape``) so nothing materializes eagerly. Both
+    directions are plain jnp ops, so they fuse into whatever jit they
+    are called from; the flat vector is f32 (the PS wire dtype)."""
+    leaves, treedef = jax.tree.flatten(abstract_tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s, dtype=np.int64)) for s in shapes]
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+
+    def ravel(tree):
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32)
+             for l in jax.tree.leaves(tree)])
+
+    def unravel(flat):
+        return jax.tree.unflatten(treedef, [
+            flat[o: o + n].reshape(s).astype(d)
+            for o, n, s, d in zip(offs, sizes, shapes, dtypes)])
+
+    return ravel, unravel
 
 
 def register_plugin(name: str):
@@ -62,6 +88,8 @@ class LMPlugin:
         self.vocab = cfg.vocab_size
         self._loss_grad = jax.jit(jax.value_and_grad(
             lambda p, b: self.model.loss(p, b)))
+        self._flat_lg = None
+        self._warming = None
 
     def init_params(self, seed: int):
         return self.model.init(jax.random.PRNGKey(seed))
@@ -70,6 +98,73 @@ class LMPlugin:
         b = {"tokens": jnp.asarray(batch["tokens"]),
              "labels": jnp.asarray(batch["labels"])}
         return self._loss_grad(params, b)
+
+    def _build_flat(self):
+        """Build the flat-state jits from abstract shapes only (no
+        eager init): ``_init_flat`` (init → flat f32) and ``_flat_lg``
+        (flat → loss, flat grads)."""
+        if self._flat_lg is not None:
+            return
+        shapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+        ravel, unravel = _flat_io(shapes)
+        self.flat_size = int(sum(
+            np.prod(l.shape, dtype=np.int64)
+            for l in jax.tree.leaves(shapes)))
+        self._init_flat = jax.jit(lambda k: ravel(self.model.init(k)))
+
+        def lg(f, b):
+            loss, g = jax.value_and_grad(self.model.loss)(unravel(f), b)
+            return loss, ravel(g)
+        self._flat_lg = jax.jit(lg)
+
+    def warm_async(self, batch_docs: int, data_cfg: Dict):
+        """Compile the fused train step on a background thread (XLA
+        releases the GIL) so it overlaps the plan-time init compile and
+        deployment instead of stalling the learner's first step."""
+        self._build_flat()
+        spec = self.dataset_spec(data_cfg)
+        ev = threading.Event()
+        self._warming = ev
+        zeros = np.zeros((batch_docs, spec.seq_len), np.int32)
+
+        def run():
+            try:
+                self._flat_lg(np.zeros(self.flat_size, np.float32),
+                              {"tokens": jnp.asarray(zeros),
+                               "labels": jnp.asarray(zeros)})
+            except Exception as e:          # advisory: log, never crash
+                print(f"[learner] warmup compile failed: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+            finally:
+                ev.set()
+        threading.Thread(target=run, daemon=True,
+                         name="plugin-warm").start()
+
+    def flat_state(self, seed: int) -> np.ndarray:
+        """Initial weights as one flat f32 vector — the learner's
+        canonical state on the PS push/pull path. Init, unflatten,
+        loss, grad and re-flatten all live inside two jits (built from
+        abstract shapes, so nothing runs op-by-op): no per-step eager
+        pytree traffic remains (it used to dominate the step). Cached
+        per seed: every learner of a job asks for the same vector."""
+        cached = getattr(self, "_flat_cache", None)
+        if cached is not None and cached[0] == seed:
+            return cached[1].copy()
+        self._build_flat()
+        flat = np.asarray(self._init_flat(jax.random.PRNGKey(seed)))
+        self._flat_cache = (seed, flat)
+        return flat.copy()
+
+    def flat_loss_grad(self, flat, batch):
+        warming = self._warming     # snapshot: learner threads race here
+        if warming is not None:
+            # first step: ride the background compile instead of racing
+            # a second identical compile against it
+            warming.wait(timeout=300)
+            self._warming = None
+        b = {"tokens": jnp.asarray(batch["tokens"]),
+             "labels": jnp.asarray(batch["labels"])}
+        return self._flat_lg(flat, b)
 
     def dataset_spec(self, data_cfg: Dict) -> DatasetSpec:
         return DatasetSpec(n_docs=data_cfg.get("n_docs", 512),
@@ -96,7 +191,9 @@ class MLPPlugin:
                 jnp.arange(batch["y"].shape[0]), batch["y"]]
             acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
             return jnp.mean(nll), acc
+        self._loss_fn = loss_fn
         self._lg = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        self._flat_lg = None
 
     def init_params(self, seed: int):
         k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
@@ -112,6 +209,29 @@ class MLPPlugin:
         x = _synthetic_features(batch["tokens"], self.d_in,
                                 self.n_classes)
         (loss, acc), g = self._lg(params, x)
+        self.last_acc = float(acc)
+        return loss, g
+
+    def flat_state(self, seed: int) -> np.ndarray:
+        cached = getattr(self, "_flat_cache", None)
+        if cached is not None and cached[0] == seed:
+            return cached[1].copy()
+        params = self.init_params(seed)
+        flat, unravel = ravel_pytree(params)
+        if self._flat_lg is None:
+            def lg(f, b):
+                (loss, acc), g = jax.value_and_grad(
+                    self._loss_fn, has_aux=True)(unravel(f), b)
+                return loss, acc, ravel_pytree(g)[0]
+            self._flat_lg = jax.jit(lg)
+        flat = np.asarray(flat)
+        self._flat_cache = (seed, flat)
+        return flat.copy()
+
+    def flat_loss_grad(self, flat, batch):
+        x = _synthetic_features(batch["tokens"], self.d_in,
+                                self.n_classes)
+        loss, acc, g = self._flat_lg(flat, x)
         self.last_acc = float(acc)
         return loss, g
 
@@ -152,6 +272,7 @@ class LearnerJobConfig:
     lr: float = 0.1
     optimizer: str = "sgd"          # PS-side solver
     solver: str = "psgd"            # psgd | modelavg | easgd | downpour
+    compression: str = "none"       # PS push wire format: none | int8
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 20
@@ -164,13 +285,16 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                       cursor: GlobalCursor, storage: StorageManager,
                       metrics: MetricsService,
                       results: Optional[Dict] = None,
-                      control=None):
+                      control=None, plugin=None):
     """Returns fn(watchdog, learner_idx) run under the watchdog.
 
     ``control`` (platform.lcm.JobControl, optional) adds the backend
     lifecycle hooks: pause/resume and on-demand checkpoint, observed at
-    step boundaries alongside preemption."""
-    plugin = PLUGINS[cfg.framework](cfg.framework_cfg)
+    step boundaries alongside preemption. ``plugin`` lets the caller
+    reuse an already-built framework plugin (the backend builds one at
+    plan time to size the PS; rebuilding it here would re-jit the
+    model for several seconds)."""
+    plugin = plugin or PLUGINS[cfg.framework](cfg.framework_cfg)
     corpus = SyntheticCorpus(plugin.dataset_spec(cfg.data_cfg))
 
     def body(wd: Watchdog, idx: int):
@@ -181,8 +305,10 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
             ps.leave(idx)
 
     def _train(wd: Watchdog, idx: int):
-        params = plugin.init_params(cfg.seed)
-        flat0, unravel = ravel_pytree(params)
+        # the learner's canonical state is the flat f32 weight vector —
+        # the same representation the PS shards, the checkpoint and the
+        # wire use, so nothing re-flattens a pytree on the hot path
+        flat = plugin.flat_state(cfg.seed)
         ckpt = None
         start_step = 0
         if cfg.checkpoint_dir and idx == 0:
@@ -193,28 +319,26 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
             probe = CheckpointManager(cfg.checkpoint_dir, keep=3)
             last = probe.latest_valid()
             if last is not None:
-                tmpl = {"flat": np.zeros_like(np.asarray(flat0))}
+                tmpl = {"flat": np.zeros_like(flat)}
                 tree, extra = probe.restore(last, tmpl)
                 start_step = int(extra.get("step", last))
                 # learner 0 republishes restored weights to the PS shards
                 if idx == 0:
-                    for shard, part in zip(
-                            ps.shards, ps._partition(
-                                np.asarray(tree["flat"]))):
-                        shard.values[:] = part
+                    ps.load_flat(np.asarray(tree["flat"]))
                     cur_epoch = int(extra.get("epoch", 0))
                     cur_off = int(extra.get("offset", 0))
                     cursor.restore(cur_epoch, cur_off)
                 wd.log(f"resumed from checkpoint step={start_step}")
 
-        flat = ps.pull(idx)
-        params = unravel(jnp.asarray(flat))
+        client = ps.make_client(idx)
+        flat = client.pull()
 
-        def save_ckpt(step, params):
+        def save_ckpt(step, flat):
             wd.set_status(CHECKPOINTING)
-            pflat, _ = ravel_pytree(params)
             epoch, offset = cursor.position()
-            ckpt.save(step, {"flat": np.asarray(pflat)},
+            # copy: the save is async and `flat` may alias the reused
+            # pull buffer
+            ckpt.save(step, {"flat": np.array(flat)},
                       extra={"step": step, "epoch": epoch,
                              "offset": offset})
             metrics.event(cfg.job_id, "checkpoint", step)
@@ -231,7 +355,7 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                 # only the checkpointing member (idx 0) consumes the
                 # request; others must leave the event set for it
                 if ckpt is not None and control.take_checkpoint_request():
-                    save_ckpt(step, params)
+                    save_ckpt(step, flat)
             if cfg.fail_at_step.get(idx) == step:
                 cfg.fail_at_step.pop(idx)     # transient: fires once
                 wd.log(f"injected crash at step {step}")
@@ -241,24 +365,20 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                 raise UserError("bad hyperparameter in user model")
             chunks = cursor.next_chunk(cfg.batch_docs)
             batch = corpus.batch_for(chunks)
-            loss, grads = plugin.loss_and_grad(params, batch)
-            gflat, _ = ravel_pytree(grads)
+            loss, gflat = plugin.flat_loss_grad(flat, batch)
             if cfg.solver == "psgd":
                 t0 = time.time()
-                ps.push(idx, np.asarray(gflat))
-                flat = ps.pull(idx)
+                client.push(np.asarray(gflat))
+                flat = client.pull()
                 sync_s = time.time() - t0
-                params = unravel(jnp.asarray(flat))
             else:
                 # local step; periodic weight sync (modelavg)
-                pflat, _ = ravel_pytree(params)
-                pflat = pflat - cfg.lr * gflat
-                params = unravel(pflat)
+                flat = flat - cfg.lr * np.asarray(gflat)
                 sync_s = 0.0
                 if (step + 1) % cfg.comm_every == 0:
                     t0 = time.time()
-                    ps.push(idx, np.asarray(pflat))
-                    params = unravel(jnp.asarray(ps.pull(idx)))
+                    client.push(flat)
+                    flat = client.pull()
                     sync_s = time.time() - t0
             wd.heartbeat(step, loss=float(loss))
             wd.log(f"step={step} loss={float(loss):.4f}"
@@ -274,17 +394,16 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                            time.time() - t_round)
             t_round = time.time()
             if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
-                save_ckpt(step + 1, params)
+                save_ckpt(step + 1, flat)
         # store.sh: upload the trained model
         if idx == 0:
-            pflat, _ = ravel_pytree(params)
             buf = io.BytesIO()
-            np.save(buf, np.asarray(pflat))
+            np.save(buf, np.asarray(flat))
             storage.upload("results", cfg.job_id, "trained_model.npy",
                            buf.getvalue())
             if results is not None:
                 results["final_loss"] = float(loss)
-                results["params"] = np.asarray(pflat)
+                results["params"] = np.array(flat)
         if ckpt is not None:
             ckpt.wait()
 

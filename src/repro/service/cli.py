@@ -5,7 +5,9 @@ the REST API').
   dlaas model list
   dlaas train start   --model <id> [--learners N --gpus G --steps S
                                     --tenant T --priority P
-                                    --distribution software-ps|pjit]
+                                    --distribution software-ps|pjit
+                                    --compression none|int8
+                                    --ps-shards N]
   dlaas train list
   dlaas train status  --id <tid>
   dlaas train logs    --id <tid> [--follow]
@@ -64,6 +66,12 @@ def main(argv=None):
                    choices=["software-ps", "pjit"],
                    help="execution backend (default: manifest's "
                         "framework.distribution, else software-ps)")
+    s.add_argument("--compression", choices=["none", "int8"],
+                   help="software-PS push wire format (default: "
+                        "manifest's framework.compression, else none)")
+    s.add_argument("--ps-shards", type=int, dest="ps_shards",
+                   help="software-PS shard count (default: manifest's "
+                        "framework.ps_shards, else 4)")
     tsub.add_parser("list")
     for name in ("status", "logs", "delete", "download"):
         p = tsub.add_parser(name)
@@ -98,7 +106,8 @@ def main(argv=None):
                          indent=1))
     elif args.cmd == "train" and args.sub == "start":
         overrides = {k: getattr(args, k) for k in
-                     ("learners", "gpus", "steps", "distribution")
+                     ("learners", "gpus", "steps", "distribution",
+                      "compression", "ps_shards")
                      if getattr(args, k) is not None}
         body = {"model_id": args.model, "overrides": overrides}
         if args.tenant is not None:

@@ -12,7 +12,9 @@ from __future__ import annotations
 
 import itertools
 import json
+import os
 import sys
+import tempfile
 import threading
 import time
 import uuid
@@ -39,11 +41,33 @@ def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
                     for i in range(n_nodes)])
 
 
+def _enable_jax_compile_cache():
+    """Point jax's persistent compilation cache at a stable directory:
+    XLA compile time dominates a smoke job's wall clock, and the cache
+    (keyed by HLO hash, safe across tenants) lets repeat jobs and
+    service restarts skip it entirely. Opt out with
+    ``DLAAS_JAX_CACHE=0``; override the path with ``DLAAS_JAX_CACHE``."""
+    cache = os.environ.get(
+        "DLAAS_JAX_CACHE",
+        os.path.join(tempfile.gettempdir(), "dlaas-jax-cache"))
+    if not cache or cache == "0":
+        return
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", cache)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          0.5)
+    except Exception as e:                     # cache is best-effort
+        print(f"[core] jax compile cache unavailable: "
+              f"{type(e).__name__}: {e}", file=sys.stderr)
+
+
 class DLaaSCore:
     def __init__(self, workdir: str, *, cluster: Optional[Cluster] = None,
                  health_checks: bool = True, tick_interval: float = 0.02,
                  admin_users: Optional[set] = None):
         self.admin_users = admin_users
+        _enable_jax_compile_cache()
         self.zk = ZooKeeper()
         self.cluster = cluster or default_cluster()
         self.scheduler = Scheduler(self.cluster,
@@ -261,6 +285,22 @@ class DLaaSCore:
                "members": members,
                "last_loss": loss.values[-1] if loss.values else None,
                "steps_done": loss.steps[-1] + 1 if loss.steps else 0}
+        # software-PS jobs report their data plane: wire bytes pre/post
+        # compression, compression ratio and fused-aggregation timing.
+        # Terminal jobs keep only the final stats snapshot — holding the
+        # PS itself would retain params/m/v/receive buffers per job for
+        # the service lifetime.
+        plan = rec.get("plan")
+        if plan is not None:
+            with self._lock:
+                ps = plan.meta.get("ps")
+                if ps is not None:
+                    out["data_plane"] = ps.stats()
+                    if state in ("COMPLETED", "FAILED", "KILLED"):
+                        plan.meta["data_plane_final"] = out["data_plane"]
+                        plan.meta["ps"] = None
+                elif "data_plane_final" in plan.meta:
+                    out["data_plane"] = plan.meta["data_plane_final"]
         if state in ("QUEUED", "PREEMPTED"):
             out["queue"] = self.lcm.queue_info(job_id)
         return out

@@ -115,6 +115,15 @@ def _next_indent(lines, i, default):
 DISTRIBUTIONS = ("software-ps", "pjit")
 DEFAULT_DISTRIBUTION = "software-ps"
 
+# software-PS data-plane knobs (core/software_ps.py)
+COMPRESSIONS = ("none", "int8")
+DEFAULT_COMPRESSION = "none"
+DEFAULT_PS_SHARDS = 4
+
+# framework keys that configure the platform, not the plugin
+_FRAMEWORK_META_KEYS = ("name", "version", "distribution",
+                        "compression", "ps_shards")
+
 
 def resolve_distribution(m: Dict[str, Any]) -> str:
     """The execution backend a manifest selects. Precedence: top-level
@@ -145,9 +154,31 @@ def resolve_framework(m: Dict[str, Any]
     fw = m.get("framework") or {}
     if isinstance(fw, dict):
         cfg = {k: v for k, v in fw.items()
-               if k not in ("name", "version", "distribution")}
+               if k not in _FRAMEWORK_META_KEYS}
         return fw.get("name"), cfg
     return fw, {}
+
+
+def resolve_ps_options(m: Dict[str, Any]) -> Tuple[str, int]:
+    """Software-PS data-plane knobs: ``(compression, ps_shards)``.
+    Precedence mirrors ``resolve_distribution``: top-level key (REST/CLI
+    override path) > ``framework.<key>`` > default. Raises UserError on
+    unknown values — the job's fault, not the platform's."""
+    from repro.platform.cluster import UserError
+    fw = m.get("framework") or {}
+    if not isinstance(fw, dict):
+        fw = {}
+    comp = m.get("compression") or fw.get("compression") \
+        or DEFAULT_COMPRESSION
+    if comp not in COMPRESSIONS:
+        raise UserError(f"unknown compression {comp!r}; "
+                        f"supported: {list(COMPRESSIONS)}")
+    shards = m.get("ps_shards", fw.get("ps_shards", DEFAULT_PS_SHARDS))
+    if not isinstance(shards, int) or isinstance(shards, bool) \
+            or shards < 1:
+        raise UserError(
+            f"ps_shards must be a positive integer, got {shards!r}")
+    return comp, shards
 
 
 def validate_manifest(m: Dict[str, Any]) -> List[str]:
@@ -162,6 +193,10 @@ def validate_manifest(m: Dict[str, Any]) -> List[str]:
     from repro.platform.cluster import UserError
     try:
         resolve_distribution(m)
+    except UserError as e:
+        errs.append(str(e))
+    try:
+        resolve_ps_options(m)
     except UserError as e:
         errs.append(str(e))
     if "learners" in m and (not isinstance(m["learners"], int)

@@ -13,10 +13,17 @@ Endpoints (v1):
                                           never fit the job; overrides
                                           may set "distribution":
                                           software-ps|pjit to pick the
-                                          execution backend)
+                                          execution backend, and
+                                          "compression": none|int8 /
+                                          "ps_shards": N to tune the
+                                          software-PS data plane)
   GET    /v1/trainings
   GET    /v1/trainings/<id>              status + member states +
-                                         progress + execution backend
+                                         progress + execution backend +
+                                         data_plane (software-ps: wire
+                                         bytes pre/post compression,
+                                         compression ratio, fused
+                                         aggregation ms/round)
   DELETE /v1/trainings/<id>              terminate
   GET    /v1/trainings/<id>/logs         collected logs
   GET    /v1/trainings/<id>/logs/stream  chunked live stream (websocket

@@ -138,6 +138,38 @@ def test_backend_lifecycle_hooks(tmp_path):
         core.close()
 
 
+def test_software_ps_int8_dataplane_end_to_end(tmp_path):
+    """A software-ps training with framework.compression: int8 trains
+    to a comparable loss, reports the data plane through the status
+    surface, and moves ≥3.5x fewer push bytes on the wire."""
+    finals = {}
+    for comp in ("none", "int8"):
+        core = DLaaSCore(str(tmp_path / comp))
+        try:
+            mid = core.deploy_model(PARITY_MANIFEST)["model_id"]
+            out = core.create_training(
+                mid, overrides={"compression": comp, "ps_shards": 2})
+            tid = out["training_id"]
+            assert core.wait_for(tid, timeout=240) == "COMPLETED"
+            dp = core.training_status(tid)["data_plane"]
+            assert dp["compression"] == comp
+            assert dp["ps_shards"] == 2
+            assert dp["agg_rounds"] >= 25
+            assert dp["agg_ms_per_round"] is not None
+            if comp == "int8":
+                assert dp["compression_ratio"] >= 3.5
+                assert dp["bytes_pushed_wire"] * 3.5 <= \
+                    dp["bytes_pushed_dense"]
+            else:
+                assert dp["bytes_pushed_wire"] == dp["bytes_pushed_dense"]
+            # loss series, not the last sample: the step loss is noisy
+            vals = core.metrics.series(tid, "loss").values
+            finals[comp] = sum(vals[-8:]) / 8
+        finally:
+            core.close()
+    assert abs(finals["int8"] - finals["none"]) < 0.3, finals
+
+
 def test_rest_rejects_unknown_distribution(tmp_path):
     with DLaaSServer(str(tmp_path)) as srv:
         mid = _req(f"{srv.url}/v1/models", "POST",

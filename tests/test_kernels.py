@@ -58,7 +58,7 @@ def test_ssd_scan(B, S, H, P, G, N, chunk, dtype):
 
 
 @pytest.mark.parametrize("solver", ["sgd", "momentum", "adam",
-                                    "easgd_center"])
+                                    "easgd_center", "average"])
 @pytest.mark.parametrize("nl,f", [(2, 2048), (8, 4096)])
 def test_ps_aggregate(solver, nl, f):
     g = _rand(0, (nl, f), jnp.float32)
@@ -71,6 +71,39 @@ def test_ps_aggregate(solver, nl, f):
     np.testing.assert_allclose(pk, pr, atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(mk, mr, atol=1e-6)
     np.testing.assert_allclose(vk, vr, atol=1e-6)
+
+
+@pytest.mark.parametrize("solver", ["sgd", "momentum", "adam",
+                                    "easgd_center", "average"])
+def test_ps_aggregate_np_matches_ref_over_rounds(solver):
+    """The in-place numpy twin (software-PS CPU hot path) tracks the
+    jnp oracle across multiple aggregation rounds, state included."""
+    rng = np.random.RandomState(0)
+    p = rng.randn(1536).astype(np.float32)
+    m = np.zeros(1536, np.float32)
+    v = np.zeros(1536, np.float32)
+    pr, mr, vr = jnp.array(p), jnp.array(m), jnp.array(v)
+    for step in range(1, 12):
+        g = rng.randn(3, 1536).astype(np.float32)
+        ref.ps_aggregate_np(g, p, m, v, step, solver=solver, lr=0.01)
+        pr, mr, vr = ref.ps_aggregate_ref(jnp.array(g), pr, mr, vr,
+                                          step, solver=solver, lr=0.01)
+    np.testing.assert_allclose(p, np.asarray(pr), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(m, np.asarray(mr), atol=1e-5)
+    np.testing.assert_allclose(v, np.asarray(vr), atol=1e-5)
+
+
+def test_ps_aggregate_block_fallback_non_pow2():
+    """Shard lengths are multiples of 256, not 4096: the kernel grid
+    must fall back to a dividing block size instead of asserting."""
+    f = 2048 + 256                                     # 9 * 256
+    g = _rand(0, (2, f), jnp.float32)
+    p = _rand(1, (f,), jnp.float32)
+    m = jnp.zeros((f,), jnp.float32)
+    v = jnp.zeros((f,), jnp.float32)
+    pk, _, _ = ops.ps_aggregate(g, p, m, v, 1, solver="sgd", lr=0.1)
+    pr, _, _ = ref.ps_aggregate_ref(g, p, m, v, 1, solver="sgd", lr=0.1)
+    np.testing.assert_allclose(pk, pr, atol=1e-6)
 
 
 def test_flash_ref_oracle_matches_folded():

@@ -4,6 +4,7 @@ device count at first import, so these cannot run in the pytest process).
 Covers: sharded-vs-local MoE equivalence, mesh solver collective patterns
 (the paper's O(L) vs O(L^2) bytes), elastic trainer resharding, and a
 miniature dry-run (lower+compile with shardings on a 4x2 mesh)."""
+import jax
 import pytest
 
 from util_subproc import run_with_devices
@@ -11,6 +12,10 @@ from util_subproc import run_with_devices
 pytestmark = pytest.mark.slow
 
 
+@pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                    reason="installed jax predates jax.sharding.AxisType "
+                           "(known environment limitation; the sharded "
+                           "MoE path needs explicit-axis meshes)")
 def test_moe_sharded_matches_local():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np

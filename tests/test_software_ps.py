@@ -1,11 +1,14 @@
 """Software parameter server: BSP barrier, Downpour on-arrival,
-partitioning, crash tolerance (leave releases the barrier)."""
+partitioning, crash tolerance (leave releases the barrier), the fused
+aggregation path, int8 wire compression with error feedback, and the
+thread-safety of the data-plane counters."""
 import threading
 import time
 
 import numpy as np
 
-from repro.core.software_ps import SoftwareParameterServer
+from repro.core.software_ps import (PARALLEL_AGG_MIN_ELEMS, PSClient,
+                                    ShardLayout, SoftwareParameterServer)
 
 
 def test_partitioning_roundtrip():
@@ -77,3 +80,162 @@ def test_adam_server_matches_reference():
         jnp.asarray(g)[None], jnp.asarray(init), jnp.zeros(16),
         jnp.zeros(16), 1, solver="adam", lr=0.1)
     np.testing.assert_allclose(ps.pull(0), np.asarray(want), atol=1e-5)
+
+
+def test_shard_layout_blocks_and_padding():
+    lay = ShardLayout.build(1000, 3)
+    assert lay.shard_len % 256 == 0
+    assert lay.padded == lay.shard_len * 3 >= 1000
+    assert sum(lay.valid_len(s) for s in range(3)) == 1000
+
+
+def test_fused_solvers_match_reference_over_rounds():
+    """Every PS-side solver routed through the fused path tracks the
+    per-solver oracle iterated by hand (multi-learner BSP rounds)."""
+    import jax.numpy as jnp
+    from repro.kernels.ref import ps_aggregate_ref
+    rng = np.random.RandomState(7)
+    for optimizer, ref_solver in (("sgd", "sgd"), ("momentum", "momentum"),
+                                  ("adam", "adam"), ("average", "average"),
+                                  ("easgd", "easgd_center")):
+        init = rng.randn(600).astype(np.float32)
+        ps = SoftwareParameterServer(init, n_shards=3, n_learners=2,
+                                     optimizer=optimizer, lr=0.05)
+        ps.join(0)
+        ps.join(1)
+        lay = ps.layout
+        want = np.zeros(lay.padded, np.float32)
+        want[:600] = init
+        m = jnp.zeros(lay.padded)
+        v = jnp.zeros(lay.padded)
+        for step in range(1, 5):
+            g = rng.randn(2, 600).astype(np.float32)
+            gp = np.zeros((2, lay.padded), np.float32)
+            gp[:, :600] = g
+            ts = [threading.Thread(target=ps.push, args=(i, g[i]))
+                  for i in range(2)]
+            [t.start() for t in ts]
+            [t.join(timeout=10) for t in ts]
+            wj, m, v = ps_aggregate_ref(
+                jnp.asarray(gp), jnp.asarray(want), m, v, step,
+                solver=ref_solver, lr=0.05, beta=1.0)
+            want = np.asarray(wj)
+        np.testing.assert_allclose(ps.pull(0), want[:600], atol=1e-4,
+                                   rtol=1e-4, err_msg=optimizer)
+
+
+def test_parallel_shard_aggregation_path():
+    """Models above PARALLEL_AGG_MIN_ELEMS aggregate shards on the
+    pool; values must match the serial result."""
+    n = PARALLEL_AGG_MIN_ELEMS
+    init = np.zeros(n, np.float32)
+    ps = SoftwareParameterServer(init, n_shards=4, n_learners=1,
+                                 optimizer="sgd", lr=1.0)
+    assert ps._pool is not None
+    ps.join(0)
+    g = np.random.RandomState(0).randn(n).astype(np.float32)
+    ps.push(0, g)
+    np.testing.assert_allclose(ps.pull(0), -g, atol=1e-6)
+
+
+def test_push_stats_are_race_free():
+    """Concurrent Downpour pushes must not drop counter increments
+    (the old unsynchronized += did)."""
+    init = np.zeros(512, np.float32)
+    ps = SoftwareParameterServer(init, n_shards=2, n_learners=8,
+                                 optimizer="sgd", lr=0.0,
+                                 trigger="on_arrival")
+    for i in range(8):
+        ps.join(i)
+    g = np.ones(512, np.float32)
+    per = 25
+
+    def pusher(i):
+        for _ in range(per):
+            ps.push(i, g)
+
+    ts = [threading.Thread(target=pusher, args=(i,)) for i in range(8)]
+    [t.start() for t in ts]
+    [t.join(timeout=30) for t in ts]
+    st = ps.stats()
+    assert st["push_count"] == 8 * per
+    assert st["bytes_pushed_wire"] == 8 * per * g.nbytes
+    assert st["agg_rounds"] == 8 * per
+
+
+def test_bsp_push_timeout_withdraws_and_reports():
+    """A timed-out BSP push returns False, counts the drop, and leaves
+    the round clean: the re-push registers exactly once."""
+    ps = SoftwareParameterServer(np.zeros(8, np.float32), n_shards=2,
+                                 n_learners=2, optimizer="sgd", lr=1.0)
+    ps.join(0)
+    ps.join(1)
+    ok = ps.push(0, np.ones(8, np.float32), timeout=0.2)
+    assert ok is False
+    assert ps.stats()["push_timeouts"] == 1
+    assert ps._arrived == []                    # withdrawn, round clean
+    # both learners push again: the round completes normally
+    done = []
+    ts = [threading.Thread(
+        target=lambda i=i: done.append(
+            ps.push(i, np.full(8, 2.0, np.float32), timeout=5.0)))
+        for i in range(2)]
+    [t.start() for t in ts]
+    [t.join(timeout=10) for t in ts]
+    assert done == [True, True]
+    np.testing.assert_allclose(ps.pull(0), -2.0 * np.ones(8))
+
+
+def test_load_flat_roundtrip():
+    init = np.zeros(700, np.float32)
+    ps = SoftwareParameterServer(init, n_shards=4, n_learners=1,
+                                 optimizer="sgd", lr=0.0)
+    w = np.random.RandomState(3).randn(700).astype(np.float32)
+    ps.load_flat(w)
+    np.testing.assert_allclose(ps.pull(0), w)
+
+
+def test_compressed_push_error_feedback_converges():
+    """int8 pushes with per-learner error feedback: the center under
+    'average' converges to the true pushed vector over rounds, and the
+    wire moves ~4x fewer bytes."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(512).astype(np.float32)
+    ps = SoftwareParameterServer(np.zeros(512, np.float32), n_shards=2,
+                                 n_learners=1, optimizer="average",
+                                 compression="int8")
+    ps.join(0)
+    client = ps.make_client(0)
+    assert isinstance(client, PSClient) and client.compression == "int8"
+    for _ in range(3):
+        client.push(x)
+    got = client.pull()
+    # one-shot quantization error bound: amax/127/2 per block
+    amax = np.abs(x).max()
+    np.testing.assert_allclose(got, x, atol=amax / 127.0)
+    st = ps.stats()
+    assert st["compression_ratio"] > 3.5
+    assert st["bytes_pushed_wire"] < st["bytes_pushed_dense"] / 3.5
+
+
+def test_compressed_bsp_multi_learner_matches_dense_approximately():
+    """BSP mean of compressed pushes ~= mean of dense pushes (sgd)."""
+    rng = np.random.RandomState(1)
+    grads = rng.randn(2, 300).astype(np.float32)
+    outs = {}
+    for comp in ("none", "int8"):
+        ps = SoftwareParameterServer(np.zeros(300, np.float32),
+                                     n_shards=2, n_learners=2,
+                                     optimizer="sgd", lr=1.0,
+                                     compression=comp)
+        ps.join(0)
+        ps.join(1)
+        clients = [ps.make_client(i) for i in range(2)]
+        ts = [threading.Thread(target=clients[i].push, args=(grads[i],))
+              for i in range(2)]
+        [t.start() for t in ts]
+        [t.join(timeout=10) for t in ts]
+        outs[comp] = clients[0].pull().copy()
+    amax = np.abs(grads).max()
+    np.testing.assert_allclose(outs["int8"], outs["none"],
+                               atol=amax / 127.0)
