@@ -24,6 +24,12 @@ spawns a subprocess with forced host devices, mirroring the dry-run.
                            final-loss delta -> BENCH_ps_dataplane.json
                            (env: PS_DATAPLANE_STEPS, PS_DATAPLANE_OUT
                            for the scripts/verify.sh smoke invocation)
+  serving                  inference endpoint (serving subsystem) under
+                           closed-loop client load at 2-3 offered
+                           concurrencies: req/s, p50/p99 latency, mean
+                           batch occupancy -> BENCH_serving.json
+                           (env: SERVING_LOADS, SERVING_REQUESTS,
+                           SERVING_OUT)
 
 Pass bench-name substrings as argv to run a subset, e.g.
 ``python benchmarks/run.py backends`` or
@@ -435,6 +441,100 @@ def bench_ps_dataplane():
     out_path.write_text(json.dumps(summary, indent=1) + "\n")
 
 
+def bench_serving():
+    """Serving trajectory: one smoke-arch inference endpoint under
+    closed-loop client load at increasing offered concurrency. Emits
+    BENCH_serving.json with req/s, p50/p99 request latency and mean
+    batch occupancy per load (occupancy measured from the engine's
+    occupied-slot-steps delta, so each load reports its own window).
+    ``SERVING_LOADS`` / ``SERVING_REQUESTS`` / ``SERVING_OUT`` shrink +
+    redirect it for CI smoke runs."""
+    import os
+    import tempfile
+
+    from repro.service.core import DLaaSCore
+    loads = [int(x) for x in
+             os.environ.get("SERVING_LOADS", "1,3,6").split(",")]
+    n_req = int(os.environ.get("SERVING_REQUESTS", "18"))
+    out_path = Path(os.environ.get("SERVING_OUT",
+                                   ROOT / "BENCH_serving.json"))
+    prompt_len, max_new, capacity = 12, 8, 3
+    core = DLaaSCore(tempfile.mkdtemp(prefix="bench_serving_"),
+                     tick_interval=0.005)
+    rows = {}
+    try:
+        eid = core.deploy_endpoint(
+            arch="stablelm-1.6b", capacity=capacity,
+            max_queue=max(64, n_req), max_new=max_new)["endpoint_id"]
+        t0 = time.time()
+        while core.endpoint_status(eid)["state"] != "READY":
+            if time.time() - t0 > 300:
+                raise RuntimeError("endpoint never became READY")
+            time.sleep(0.05)
+        # warm the prefill jit for the bench prompt length so the first
+        # load isn't dominated by one compile
+        core.predict(eid, np.arange(prompt_len) + 1, max_new=1)
+        for load in loads:
+            before = core.endpoint_status(eid)["stats"]
+            lats, lock = [], threading.Lock()
+            rng = np.random.RandomState(load)
+            prompts = [rng.randint(0, 100, size=prompt_len)
+                       for _ in range(n_req)]
+
+            def client(idx, load=load, prompts=prompts, lats=lats,
+                       lock=lock):
+                for i in range(idx, n_req, load):
+                    t1 = time.time()
+                    core.predict(eid, prompts[i], max_new=max_new)
+                    with lock:
+                        lats.append(time.time() - t1)
+
+            t1 = time.time()
+            ts = [threading.Thread(target=client, args=(k,))
+                  for k in range(load)]
+            [t.start() for t in ts]
+            [t.join() for t in ts]
+            wall = time.time() - t1
+            after = core.endpoint_status(eid)["stats"]
+            d_steps = after["decode_steps"] - before["decode_steps"]
+            d_occ = (after["occupied_slot_steps"]
+                     - before["occupied_slot_steps"])
+            lats.sort()
+            row = {
+                "offered_clients": load, "requests": n_req,
+                "wall_s": round(wall, 3),
+                "req_per_s": round(n_req / wall, 2),
+                "p50_latency_s": round(lats[len(lats) // 2], 4),
+                "p99_latency_s": round(
+                    lats[max(0, int(np.ceil(0.99 * len(lats))) - 1)], 4),
+                "mean_batch_occupancy": round(
+                    d_occ / (d_steps * capacity), 4) if d_steps else None,
+                "rejected": after["rejected_total"]
+                - before["rejected_total"],
+            }
+            rows[str(load)] = row
+            emit(f"serving_load{load}", wall / n_req * 1e6,
+                 f"req_per_s={row['req_per_s']};"
+                 f"p50_s={row['p50_latency_s']};"
+                 f"p99_s={row['p99_latency_s']};"
+                 f"occupancy={row['mean_batch_occupancy']}")
+        core.stop_endpoint(eid)
+        t0 = time.time()
+        while core.endpoint_status(eid)["state"] != "STOPPED" \
+                and time.time() - t0 < 60:
+            time.sleep(0.05)
+    finally:
+        core.close()
+    out_path.write_text(json.dumps({
+        "arch": "stablelm-1.6b smoke",
+        "capacity": capacity, "prompt_len": prompt_len,
+        "max_new": max_new,
+        "note": ("closed-loop clients on one host; compare loads within "
+                 "a file, not across commits — container speed varies "
+                 "and the jax compile cache warm-starts repeats"),
+        "loads": rows}, indent=1) + "\n")
+
+
 def bench_roofline_table():
     """Summarise §Roofline over existing dry-run artifacts (if present)."""
     from repro.analysis.roofline import (KERNEL_SCOPES, analyze_file,
@@ -476,6 +576,7 @@ def main(only=None) -> None:
         bench_software_ps, bench_solvers, bench_cursor,
         bench_checkpoint, bench_quantize, bench_kernels,
         bench_rest_api, bench_backends, bench_ps_dataplane,
+        bench_serving,
         bench_scheduler, bench_ps_vs_broadcast, bench_roofline_table,
     ]
     if only:

@@ -1,135 +1,129 @@
-"""End-to-end serving driver: batched prefill + continuous-batching decode.
+"""End-to-end serving driver: the train→deploy→predict loop through the
+managed inference subsystem (src/repro/serving/).
 
-Loads a smoke-scale LM (any --arch), prefills a batch of prompts, then
-decodes with a continuous-batching loop: finished sequences are retired
-and queued requests join mid-flight by prefilling into the freed cache
-slot — the serving pattern a production deployment of this stack uses,
-exercised on CPU.
+Trains a tiny model through the control plane, deploys it as an
+inference endpoint (an LCM job with a continuous-batching engine),
+streams concurrent predict requests at it — finished sequences retire
+and queued requests join mid-flight into freed KV-cache slots — then
+prints the endpoint stats and drains it.
 
   PYTHONPATH=src python examples/serve_batch.py --arch stablelm-1.6b \
-      --requests 6 --batch 3 --max-new 12
+      --requests 8 --capacity 3 --max-new 8
 """
 import argparse
 import sys
+import tempfile
+import threading
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.configs.base import reduce_for_smoke  # noqa: E402
-from repro.configs.registry import get_arch  # noqa: E402
-from repro.distributed.sharding import Dist  # noqa: E402
-from repro.models import make_model  # noqa: E402
+from repro.service.core import DLaaSCore  # noqa: E402
 
-OPTS = {"remat": "none", "xent_chunk": 32, "q_chunk": 32, "k_chunk": 32}
+MANIFEST = """name: serve-batch-src
+learners: 1
+gpus: 1
+steps: {steps}
+batch_docs: 2
+checkpoint_every: 100
+data:
+  n_docs: 32
+  seq_len: 16
+framework:
+  name: repro-lm
+  arch: {arch}
+"""
+
+
+def wait_state(core, eid, want, timeout=300.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        st = core.endpoint_status(eid)
+        if st["state"] == want:
+            return st
+        if st["state"] == "FAILED":
+            raise SystemExit(f"endpoint {eid} FAILED "
+                             f"(job {st['job_state']})")
+        time.sleep(0.05)
+    raise SystemExit(f"endpoint {eid} never reached {want} "
+                     f"within {timeout:.0f}s")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--batch", type=int, default=3)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=3)
     args = ap.parse_args()
 
-    cfg = reduce_for_smoke(get_arch(args.arch))
-    if cfg.family in ("encdec", "vlm"):
-        print(f"note: {args.arch} uses a stub frontend; serving the text "
-              f"backbone only")
-    model = make_model(cfg, Dist(), OPTS)
-    params = model.init(jax.random.PRNGKey(0))
-    B, P, CAP = args.batch, args.prompt_len, args.capacity
-    rng = np.random.RandomState(0)
+    core = DLaaSCore(tempfile.mkdtemp(prefix="serve_batch_"),
+                     tick_interval=0.005)
+    try:
+        # 1) train through the platform (weights land in the results
+        #    store — the same object the endpoint will load)
+        print(f"== training {args.arch} ({args.train_steps} steps) ==")
+        mid = core.deploy_model(MANIFEST.format(
+            arch=args.arch, steps=args.train_steps))["model_id"]
+        tid = core.create_training(mid)["training_id"]
+        st = core.wait_for(tid, timeout=300)
+        print(f"training {tid}: {st}")
+        if st != "COMPLETED":
+            raise SystemExit(f"training failed: {st}")
 
-    # request queue
-    queue = [rng.randint(0, cfg.vocab_size, size=P).astype(np.int32)
-             for _ in range(args.requests)]
-    eos = 0
+        # 2) deploy: the endpoint is an LCM job (queued, placed,
+        #    metered); DEPLOYING covers weight download + jit build
+        out = core.deploy_endpoint(
+            from_training=tid, capacity=args.capacity,
+            max_new=args.max_new, max_queue=max(16, args.requests))
+        eid = out["endpoint_id"]
+        print(f"== deployed {eid} from {tid} ==")
+        wait_state(core, eid, "READY")
+        print("endpoint READY")
 
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode, donate_argnums=(1,))
+        # 3) stream concurrent predicts: more requests than slots, so
+        #    late requests join mid-flight as earlier ones retire
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, 100, size=args.prompt_len)
+                   for _ in range(args.requests)]
+        results = [None] * args.requests
+        t0 = time.time()
 
-    def pad_cache(cache):
-        out = dict(cache)
-        for k in ("k", "v"):
-            if k in out:
-                pads = [(0, 0)] * out[k].ndim
-                pads[2] = (0, CAP - out[k].shape[2])
-                out[k] = jnp.pad(out[k], pads)
-        return out
+        def client(i):
+            results[i] = core.predict(eid, prompts[i],
+                                      max_new=args.max_new)
 
-    # initial batch
-    active = [queue.pop(0) for _ in range(min(B, len(queue)))]
-    toks = jnp.asarray(np.stack(active))
-    logits, cache = prefill(params, {"tokens": toks})
-    cache = pad_cache(cache)
-    outputs = {i: [] for i in range(len(active))}
-    slot_req = list(range(len(active)))
-    next_req = len(active)
-    done = 0
-    new_counts = [0] * B
-    t0 = time.time()
-    steps = 0
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(args.requests)]
+        [t.start() for t in threads]
+        [t.join() for t in threads]
+        wall = time.time() - t0
+        for i, r in enumerate(results):
+            toks = r["tokens"]
+            print(f"req {i}: {len(toks)} tokens in {r['latency_s']}s: "
+                  f"{toks[:8]}{'...' if len(toks) > 8 else ''}")
 
-    cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    while done < args.requests:
-        logits, cache = decode(params, cache, {"tokens": cur})
-        steps += 1
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        cur_np = np.asarray(cur[:, 0])
-        for s in range(len(slot_req)):
-            r = slot_req[s]
-            if r is None:
-                continue
-            outputs[r].append(int(cur_np[s]))
-            new_counts[s] += 1
-            if new_counts[s] >= args.max_new or int(cur_np[s]) == eos:
-                print(f"req {r}: finished with {len(outputs[r])} tokens: "
-                      f"{outputs[r][:8]}{'...' if len(outputs[r]) > 8 else ''}")
-                done += 1
-                slot_req[s] = None
-                if queue:
-                    # continuous batching: prefill the newcomer alone and
-                    # splice its cache into the freed slot
-                    prompt = queue.pop(0)
-                    lg1, c1 = prefill(
-                        params, {"tokens": jnp.asarray(prompt)[None]})
-                    c1 = pad_cache(c1)
-                    cache = splice(cache, c1, s)
-                    slot_req[s] = next_req
-                    outputs[next_req] = []
-                    new_counts[s] = 0
-                    nxt = nxt.at[s].set(
-                        jnp.argmax(lg1[0, -1]).astype(jnp.int32))
-                    next_req += 1
-        cur = nxt[:, None]
-    dt = time.time() - t0
-    tps = steps * B / max(dt, 1e-9)
-    print(f"served {args.requests} requests in {dt:.2f}s "
-          f"({steps} decode steps, {tps:.1f} tok/s batched)")
-
-
-def splice(cache, one, slot):
-    out = dict(cache)
-    for k in ("k", "v"):
-        if k in out:
-            out[k] = out[k].at[:, slot:slot + 1].set(one[k])
-    if "ssm" in out:
-        ax = 1 if out["ssm"].ndim == 5 else 2
-        idx = (slice(None),) * ax + (slice(slot, slot + 1),)
-        out["ssm"] = out["ssm"].at[idx].set(one["ssm"])
-        axc = 1 if out["conv"].ndim == 4 else 2
-        idxc = (slice(None),) * axc + (slice(slot, slot + 1),)
-        out["conv"] = out["conv"].at[idxc].set(one["conv"])
-    # NOTE: per-slot positions are tracked host-side; the shared scalar
-    # pos is the max — valid because decode_attention masks by length.
-    return out
+        # 4) stats + drain
+        stats = core.endpoint_status(eid)["stats"]
+        print(f"== served {stats['completed_total']} requests in "
+              f"{wall:.2f}s ({stats['completed_total'] / wall:.1f} req/s, "
+              f"{stats['tokens_out_total']} tokens) ==")
+        print(f"   occupancy={stats['mean_batch_occupancy']} over "
+              f"{stats['decode_steps']} decode steps; "
+              f"p50={stats['p50_latency_s']}s "
+              f"p99={stats['p99_latency_s']}s; "
+              f"rejected={stats['rejected_total']}")
+        core.stop_endpoint(eid)
+        wait_state(core, eid, "STOPPED", timeout=60.0)
+        print(f"endpoint drained and STOPPED; final stats snapshot "
+              f"kept, KV buffers released")
+    finally:
+        core.close()
 
 
 if __name__ == "__main__":

@@ -69,6 +69,50 @@ PS_DATAPLANE_STEPS=6 PS_DATAPLANE_OUT="$(mktemp /tmp/ps_dataplane.XXXXXX.json)" 
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/run.py ps-dataplane
 
+echo "== serving smoke (deploy smoke arch, N predicts, drain; fails on" \
+     "any rejected request at smoke load) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import tempfile
+import time
+
+import numpy as np
+
+from repro.service.core import DLaaSCore
+
+core = DLaaSCore(tempfile.mkdtemp(prefix="verify_serving_"),
+                 tick_interval=0.005)
+try:
+    eid = core.deploy_endpoint(arch="stablelm-1.6b", capacity=2,
+                               max_queue=16, max_new=4)["endpoint_id"]
+    t0 = time.time()
+    while core.endpoint_status(eid)["state"] != "READY":
+        if time.time() - t0 > 300:
+            raise SystemExit("serving smoke FAILED: endpoint not READY")
+        time.sleep(0.1)
+    rng = np.random.RandomState(0)
+    for i in range(6):
+        out = core.predict(eid, rng.randint(0, 100, size=8), max_new=4)
+        assert len(out["tokens"]) == 4, out
+    core.stop_endpoint(eid)
+    t0 = time.time()
+    while True:
+        st = core.endpoint_status(eid)
+        if st["state"] == "STOPPED":
+            break
+        if time.time() - t0 > 60:
+            raise SystemExit("serving smoke FAILED: endpoint not STOPPED")
+        time.sleep(0.1)
+    stats = st["stats"]
+    assert stats["rejected_total"] == 0, \
+        f"serving smoke FAILED: rejected requests at smoke load: {stats}"
+    assert stats["completed_total"] == 6, stats
+    print("serving smoke OK:",
+          {k: stats[k] for k in ("completed_total", "p50_latency_s",
+                                 "mean_batch_occupancy")})
+finally:
+    core.close()
+EOF
+
 echo "== backend-parity + manifest test groups =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_backends.py tests/test_manifest.py

@@ -64,6 +64,28 @@ class MetricsService:
                       f"{metric}: {type(e).__name__}: {e}",
                       file=sys.stderr)
 
+    def record_bounded(self, job_id: str, metric: str, step: int,
+                       value: float, keep: int = 4096):
+        """Record into a rolling-window series capped at ``keep``
+        entries. For long-lived producers (serving endpoints emit one
+        latency per request and one occupancy per decode step forever)
+        an unbounded Series would grow RSS without limit; percentiles
+        over the window are a rolling view, which is what an endpoint's
+        p50/p99 should mean anyway."""
+        with self._lock:
+            s = self._series[job_id][metric]
+            s.add(step, value)
+            if len(s.values) > keep:
+                del s.steps[:-keep]
+                del s.values[:-keep]
+        for cb in self._subs:
+            try:
+                cb(job_id, metric, step, value)
+            except Exception as e:
+                print(f"[metrics] subscriber failed for {job_id}/"
+                      f"{metric}: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+
     def incr(self, job_id: str, counter: str, value: float = 1.0):
         """Atomic monotonic counter — safe against concurrent learners
         (a bare ``+=`` on a shared attribute drops increments)."""
@@ -90,6 +112,28 @@ class MetricsService:
     def metrics(self, job_id: str) -> List[str]:
         with self._lock:
             return sorted(self._series[job_id])
+
+    def percentile(self, job_id: str, metric: str,
+                   q: float) -> Optional[float]:
+        """q-th percentile (nearest-rank) of a series' values — e.g.
+        p50/p99 request latency for a serving endpoint."""
+        with self._lock:
+            vals = sorted(self._series[job_id][metric].values)
+        if not vals:
+            return None
+        idx = max(0, min(len(vals) - 1,
+                         int(math.ceil(q / 100.0 * len(vals))) - 1))
+        return vals[idx]
+
+    def drop(self, job_id: str):
+        """Unregister a job's metrics (series, events, counters) — the
+        endpoint-teardown path: the owner snapshots what it needs, then
+        drops the rest so a long-lived service doesn't accumulate
+        per-endpoint state forever."""
+        with self._lock:
+            self._series.pop(job_id, None)
+            self._events.pop(job_id, None)
+            self._counters.pop(job_id, None)
 
     def events(self, job_id: str, kind: Optional[str] = None) -> List[Dict]:
         with self._lock:

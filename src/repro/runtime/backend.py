@@ -19,6 +19,10 @@ checkpoint/pause/resume hooks:
     (re)incarnation rebuilds the step for the current ``Dist`` and
     restores the latest checkpoint with resharding, so
     preemption-resume and ``resume(new_dist)`` share one path.
+  * ``serving`` (registered from serving/endpoint.py) — inference, not
+    training: one ``server`` task runs a continuous-batching
+    ``InferenceEngine`` until drained; endpoints queue, meter, preempt
+    and pause through the identical plan/launch/control machinery.
 
 Queue, fair-share, preemption and PREEMPTED-resume semantics are
 backend-independent: both plans flow through the same FairShareQueue /

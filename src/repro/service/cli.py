@@ -13,6 +13,14 @@ the REST API').
   dlaas train logs    --id <tid> [--follow]
   dlaas train delete  --id <tid>
   dlaas train download --id <tid> --out model.npy
+  dlaas serve start   --from-training <tid> | --arch <arch-id>
+                      [--capacity N --max-queue N --max-new N
+                       --tenant T --priority P]
+  dlaas serve list
+  dlaas serve status  --id <endpoint-id>
+  dlaas serve predict --id <endpoint-id> --tokens "1 2 3"
+                      [--max-new N --deadline S]
+  dlaas serve stop    --id <endpoint-id>        # drain, then stop
   dlaas queue                               # fair-share queue + tenants
   dlaas tenant list
   dlaas tenant set    --name T [--weight W --gpus G --cpus C --memory M]
@@ -81,6 +89,32 @@ def main(argv=None):
         if name == "logs":
             p.add_argument("--follow", action="store_true")
 
+    sv = sub.add_parser("serve")
+    svsub = sv.add_subparsers(dest="sub", required=True)
+    ss = svsub.add_parser("start")
+    ss.add_argument("--from-training", dest="from_training",
+                    help="completed training id to serve weights from")
+    ss.add_argument("--arch", help="model-zoo arch (fresh init weights)")
+    ss.add_argument("--capacity", type=int,
+                    help="concurrent decode slots (default 2)")
+    ss.add_argument("--max-queue", type=int, dest="max_queue",
+                    help="admission queue bound (reject with 429 beyond)")
+    ss.add_argument("--max-new", type=int, dest="max_new",
+                    help="default generated tokens per request")
+    ss.add_argument("--gpus", type=int)
+    ss.add_argument("--tenant")
+    ss.add_argument("--priority", type=int)
+    svsub.add_parser("list")
+    for name in ("status", "predict", "stop"):
+        p = svsub.add_parser(name)
+        p.add_argument("--id", required=True)
+        if name == "predict":
+            p.add_argument("--tokens", required=True,
+                           help="space-separated token ids")
+            p.add_argument("--max-new", type=int, dest="max_new")
+            p.add_argument("--deadline", type=float,
+                           help="per-request deadline in seconds")
+
     sub.add_parser("queue")
 
     tn = sub.add_parser("tenant")
@@ -143,6 +177,31 @@ def main(argv=None):
             f.write(data if isinstance(data, bytes)
                     else json.dumps(data).encode())
         print(f"wrote {args.out}")
+    elif args.cmd == "serve" and args.sub == "start":
+        body = {k: getattr(args, k) for k in
+                ("from_training", "arch", "capacity", "max_queue",
+                 "max_new", "gpus", "tenant", "priority")
+                if getattr(args, k) is not None}
+        print(json.dumps(_req(f"{base}/v1/models", "POST", body,
+                              args.token)))
+    elif args.cmd == "serve" and args.sub == "list":
+        rows = _req(f"{base}/v1/models", token=args.token)
+        print(json.dumps([r for r in rows
+                          if r.get("kind") == "endpoint"], indent=1))
+    elif args.cmd == "serve" and args.sub == "status":
+        print(json.dumps(_req(f"{base}/v1/models/{args.id}",
+                              token=args.token), indent=1))
+    elif args.cmd == "serve" and args.sub == "predict":
+        body = {"tokens": [int(t) for t in args.tokens.split()]}
+        if args.max_new is not None:
+            body["max_new"] = args.max_new
+        if args.deadline is not None:
+            body["deadline_s"] = args.deadline
+        print(json.dumps(_req(f"{base}/v1/models/{args.id}/predict",
+                              "POST", body, args.token)))
+    elif args.cmd == "serve" and args.sub == "stop":
+        print(json.dumps(_req(f"{base}/v1/models/{args.id}", "DELETE",
+                              token=args.token)))
     elif args.cmd == "queue":
         print(json.dumps(_req(f"{base}/v1/queue", token=args.token),
                          indent=1))

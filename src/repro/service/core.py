@@ -32,6 +32,8 @@ from repro.runtime.backend import BackendContext, get_backend
 from repro.runtime.learner import PLUGINS
 from repro.service.manifest import (parse_manifest, resolve_distribution,
                                     resolve_framework, validate_manifest)
+from repro.serving.engine import DeadlineExceeded
+from repro.serving.endpoint import ModelEndpoint
 
 
 def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
@@ -83,6 +85,7 @@ class DLaaSCore:
         self.storage.register("results", LocalFSStore(f"{workdir}/results"))
         self.models: Dict[str, Dict] = {}
         self.trainings: Dict[str, Dict] = {}
+        self.endpoints: Dict[str, ModelEndpoint] = {}
         self._job_seq = itertools.count(1)
         self._lock = threading.RLock()
         self._stop = threading.Event()
@@ -108,6 +111,17 @@ class DLaaSCore:
                     self.lcm.monitor(jid)
                 except Exception as e:
                     self._tick_error(jid, e)
+            for eid in list(self.endpoints):
+                try:
+                    st = self.lcm.monitor(eid)
+                    if st in ("COMPLETED", "FAILED", "KILLED"):
+                        # terminal: snapshot stats, free KV buffers,
+                        # unregister per-endpoint metrics
+                        ep = self.endpoints.get(eid)
+                        if ep is not None:
+                            ep.finalize(self.metrics)
+                except Exception as e:
+                    self._tick_error(eid, e)
             time.sleep(interval)
 
     def _tick_error(self, context: str, exc: Exception):
@@ -312,9 +326,14 @@ class DLaaSCore:
     def _handle(self, job_id: str):
         with self._lock:
             rec = self.trainings.get(job_id)
-        if rec is None or "handle" not in rec:
-            raise KeyError(job_id)
-        return get_backend(rec["backend"]), rec["handle"]
+            ep = self.endpoints.get(job_id)
+        if rec is not None and "handle" in rec:
+            return get_backend(rec["backend"]), rec["handle"]
+        if ep is not None and ep.handle is not None:
+            # endpoints share the lifecycle hooks: pause gates serving
+            # at a batch-step boundary, resume reopens it
+            return get_backend("serving"), ep.handle
+        raise KeyError(job_id)
 
     def pause_training(self, job_id: str):
         backend, handle = self._handle(job_id)
@@ -354,6 +373,149 @@ class DLaaSCore:
     def download_model(self, job_id: str) -> bytes:
         return self.storage.download("results", job_id,
                                      "trained_model.npy")
+
+    # -------------------------------------------------- serving endpoints
+    def deploy_endpoint(self, *, from_training: Optional[str] = None,
+                        arch: Optional[str] = None, capacity: int = 2,
+                        max_queue: int = 16, max_new: int = 16,
+                        max_seq: Optional[int] = None, gpus: int = 1,
+                        memory_mb: int = 1024,
+                        eos_id: Optional[int] = None, seed: int = 0,
+                        user: str = "anon", tenant: Optional[str] = None,
+                        priority: int = 0) -> Dict:
+        """Deploy an inference endpoint — from a COMPLETED training job
+        (weights from its results/checkpoint) or straight from an arch
+        (fresh init; load-testing path). The endpoint is a job: it flows
+        through admission control, the fair-share queue and the LCM like
+        a training, and its engine serves until drained."""
+        self._meter(user)
+        if from_training is not None:
+            with self._lock:
+                rec = self.trainings.get(from_training)
+            if rec is None:
+                raise KeyError(from_training)
+            if self.lcm.job_state(from_training) != "COMPLETED":
+                raise ValueError(
+                    f"training {from_training} is not COMPLETED "
+                    f"({self.lcm.job_state(from_training)})")
+            fw_name, fw_cfg = resolve_framework(rec["manifest"])
+            if fw_name != "repro-lm":
+                raise ValueError(
+                    f"only model-zoo ('repro-lm') trainings can be "
+                    f"served; {from_training} used {fw_name!r}")
+            arch = fw_cfg.get("arch", "stablelm-1.6b")
+        elif arch is not None:
+            from repro.configs.registry import get_arch
+            try:
+                get_arch(arch)
+            except KeyError as e:
+                raise ValueError(str(e)) from None
+        else:
+            raise ValueError(
+                "deploy needs 'from_training' (a completed training id) "
+                "or 'arch' (a model-zoo architecture)")
+        tenant = tenant or user
+        endpoint_id = f"endpoint-{uuid.uuid4().hex[:8]}"
+        backend = get_backend("serving")
+        spec = JobSpec(job_id=endpoint_id, learners=1,
+                       gpus_per_learner=int(gpus),
+                       memory_mb=int(memory_mb),
+                       tenant=tenant, priority=int(priority))
+        manifest = {
+            "framework": {"name": "repro-lm", "arch": arch},
+            "source_training": from_training,
+            "serving": {"capacity": int(capacity),
+                        "max_queue": int(max_queue),
+                        "max_new": int(max_new), "max_seq": max_seq,
+                        "eos_id": eos_id, "seed": int(seed)}}
+        ctx = BackendContext(zk=self.zk, storage=self.storage,
+                             metrics=self.metrics, workdir=self.workdir)
+        plan = backend.plan(spec, manifest, ctx)
+        self.scheduler.check_admission(tenant, plan.total_resources())
+        ep = ModelEndpoint(endpoint_id, plan, user=user)
+        with self._lock:
+            self.endpoints[endpoint_id] = ep
+        try:
+            ep.handle = backend.launch(plan, self.lcm)
+        except QuotaExceeded:
+            with self._lock:
+                self.endpoints.pop(endpoint_id, None)
+            self.lcm.kill(endpoint_id)
+            raise
+        return {"endpoint_id": endpoint_id, "arch": arch,
+                "tenant": tenant, "source_training": from_training,
+                "state": ep.state()}
+
+    def _endpoint(self, endpoint_id: str) -> ModelEndpoint:
+        with self._lock:
+            ep = self.endpoints.get(endpoint_id)
+        if ep is None:
+            raise KeyError(endpoint_id)
+        return ep
+
+    def list_endpoints(self, user: str = "anon") -> List[Dict]:
+        self._meter(user)
+        with self._lock:
+            eps = list(self.endpoints.values())
+        return [{"endpoint_id": ep.endpoint_id, "arch": ep.arch,
+                 "state": ep.state(),
+                 "source_training": ep.source_training} for ep in eps]
+
+    def endpoint_status(self, endpoint_id: str) -> Dict:
+        ep = self._endpoint(endpoint_id)
+        state = self.lcm.monitor(endpoint_id)
+        if state in ("COMPLETED", "FAILED", "KILLED"):
+            ep.finalize(self.metrics)
+        out = ep.status(job_state=state)
+        if state in ("QUEUED", "PREEMPTED"):
+            out["queue"] = self.lcm.queue_info(endpoint_id)
+        return out
+
+    def predict(self, endpoint_id: str, tokens, *,
+                max_new: Optional[int] = None,
+                deadline_s: Optional[float] = None, user: str = "anon",
+                timeout: float = 120.0) -> Dict:
+        """Submit one request and block for its completion. Raises
+        QueueFull (→429) on admission overflow, EndpointClosed (→409)
+        when draining/stopped, DeadlineExceeded (→504) when the request
+        misses its deadline."""
+        self._meter(user)
+        ep = self._endpoint(endpoint_id)
+        t0 = time.time()
+        req = ep.engine.submit(tokens, max_new=max_new,
+                               deadline_s=deadline_s)
+        wait_s = (deadline_s + 5.0) if deadline_s is not None else timeout
+        req.wait(timeout=wait_s)
+        if req.status == "DONE":
+            return {"endpoint_id": endpoint_id, "request_id": req.req_id,
+                    "tokens": req.tokens,
+                    "n_prompt": int(req.prompt.size),
+                    "latency_s": round(time.time() - t0, 4)}
+        if req.status == "EXPIRED":
+            raise DeadlineExceeded(
+                f"request {req.req_id} missed its deadline")
+        if req.status == "FAILED":
+            raise RuntimeError(f"request {req.req_id} failed: "
+                               f"{req.error or 'endpoint stopped'}")
+        raise DeadlineExceeded(
+            f"request {req.req_id} still {req.status} after {wait_s:.0f}s "
+            f"(endpoint {ep.state()})")
+
+    def stop_endpoint(self, endpoint_id: str) -> Dict:
+        """Stop an endpoint. Serving endpoints drain gracefully (finish
+        in-flight + queued work, then the server task exits and the LCM
+        reclaims resources). An endpoint that never started serving
+        (still QUEUED/PREEMPTED/placing) is killed outright — draining
+        alone would leave the dead job competing in the fair-share
+        queue forever."""
+        ep = self._endpoint(endpoint_id)
+        ep.drain()
+        if not ep.engine.ready and \
+                self.lcm.job_state(endpoint_id) not in (
+                    "COMPLETED", "FAILED", "KILLED"):
+            self.lcm.kill(endpoint_id)
+            ep.finalize(self.metrics)
+        return {"endpoint_id": endpoint_id, "state": ep.state()}
 
     # ---------------------------------------------------------------- helpers
     def wait_for(self, job_id: str, timeout: float = 60.0) -> str:

@@ -4,9 +4,25 @@ the DLaaS command-line interface').
 
 Endpoints (v1):
   POST   /v1/models                      {manifest: "<yaml>"} -> model_id
-  GET    /v1/models
-  GET    /v1/models/<id>
-  DELETE /v1/models/<id>
+                                         — or deploy an INFERENCE
+                                         endpoint: {from_training: <tid>}
+                                         (weights from a completed
+                                         training) or {arch: <arch-id>}
+                                         (fresh init), plus optional
+                                         capacity/max_queue/max_new/
+                                         max_seq/eos_id/gpus/tenant/
+                                         priority -> endpoint_id
+  GET    /v1/models                      manifests + serving endpoints
+  GET    /v1/models/<id>                 manifest, or endpoint status
+                                         (state DEPLOYING|READY|DRAINING|
+                                         STOPPED|FAILED + request/latency/
+                                         occupancy stats)
+  POST   /v1/models/<id>/predict         {tokens: [..], max_new,
+                                          deadline_s} -> generated tokens
+                                         (429 queue full, 409 draining,
+                                          504 deadline missed)
+  DELETE /v1/models/<id>                 delete manifest — or drain+stop
+                                         a serving endpoint
   POST   /v1/trainings                   {model_id, overrides, tenant,
                                           priority} -> training_id
                                          (429 if the tenant quota can
@@ -51,6 +67,8 @@ from typing import Optional
 from repro.platform.cluster import UserError
 from repro.platform.queue import QuotaExceeded
 from repro.service.core import DLaaSCore
+from repro.serving.engine import (DeadlineExceeded, EndpointClosed,
+                                  QueueFull)
 
 
 def _user_of(handler) -> str:
@@ -89,10 +107,31 @@ class _Handler(BaseHTTPRequestHandler):
         user = _user_of(self)
         parts = [p for p in self.path.split("/") if p]
         try:
+            if len(parts) == 4 and parts[:2] == ["v1", "models"] \
+                    and parts[3] == "predict":
+                body = self._body()
+                try:
+                    return self._json(self.core.predict(
+                        parts[2], body.get("tokens") or [],
+                        max_new=body.get("max_new"),
+                        deadline_s=body.get("deadline_s"), user=user))
+                except KeyError as e:
+                    return self._err(404, f"no such endpoint: {e}")
             if parts == ["v1", "models"]:
                 body = self._body()
+                if "manifest" in body:
+                    return self._json(
+                        self.core.deploy_model(body["manifest"], user),
+                        201)
+                # serving: deploy an inference endpoint from a completed
+                # training job's weights, or fresh from an arch
+                kw = {k: body[k] for k in
+                      ("from_training", "arch", "capacity", "max_queue",
+                       "max_new", "max_seq", "gpus", "memory_mb",
+                       "eos_id", "seed", "tenant", "priority")
+                      if body.get(k) is not None}
                 return self._json(
-                    self.core.deploy_model(body["manifest"], user), 201)
+                    self.core.deploy_endpoint(user=user, **kw), 201)
             if parts == ["v1", "trainings"]:
                 body = self._body()
                 return self._json(
@@ -116,8 +155,12 @@ class _Handler(BaseHTTPRequestHandler):
                     quota_cpus=num("quota_cpus", float),
                     quota_memory_mb=num("quota_memory_mb", int)), 201)
             return self._err(404, f"no route POST {self.path}")
-        except QuotaExceeded as e:
+        except (QuotaExceeded, QueueFull) as e:
             return self._err(429, str(e))
+        except EndpointClosed as e:
+            return self._err(409, str(e))
+        except DeadlineExceeded as e:
+            return self._err(504, str(e))
         except (KeyError, ValueError, UserError) as e:
             # UserError: bad manifest input (e.g. unknown
             # framework.distribution) — the job's fault, HTTP 400
@@ -128,8 +171,14 @@ class _Handler(BaseHTTPRequestHandler):
         parts = [p for p in self.path.split("/") if p]
         try:
             if parts == ["v1", "models"]:
-                return self._json(self.core.list_models(user))
+                rows = [{**r, "kind": "manifest"}
+                        for r in self.core.list_models(user)]
+                rows += [{**r, "kind": "endpoint"}
+                         for r in self.core.list_endpoints(user)]
+                return self._json(rows)
             if len(parts) == 3 and parts[:2] == ["v1", "models"]:
+                if parts[2] in self.core.endpoints:
+                    return self._json(self.core.endpoint_status(parts[2]))
                 m = self.core.get_model(parts[2])
                 return self._json({"model_id": parts[2],
                                    "manifest": m["manifest"]})
@@ -176,6 +225,10 @@ class _Handler(BaseHTTPRequestHandler):
         parts = [p for p in self.path.split("/") if p]
         try:
             if len(parts) == 3 and parts[1] == "models":
+                if parts[2] in self.core.endpoints:
+                    # serving endpoint: drain (finish in-flight), then
+                    # the LCM decommissions the server task
+                    return self._json(self.core.stop_endpoint(parts[2]))
                 self.core.delete_model(parts[2])
                 return self._json({"deleted": parts[2]})
             if len(parts) == 3 and parts[1] == "trainings":

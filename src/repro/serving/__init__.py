@@ -1,0 +1,23 @@
+"""Model-serving subsystem: managed inference endpoints over the same
+control plane that runs training (the train→deploy→predict loop of the
+DLaaS/FfDL lineage).
+
+  engine.py    — InferenceEngine: continuous-batching decode runtime
+                 (slot-based KV cache, bounded admission queue,
+                 per-request deadlines)
+  endpoint.py  — ModelEndpoint lifecycle (DEPLOYING→READY→DRAINING→
+                 STOPPED) + the ``serving`` execution backend that
+                 plans endpoints as LCM jobs
+"""
+from repro.serving.engine import (DeadlineExceeded, EndpointClosed,
+                                  InferenceEngine, InferenceRequest,
+                                  QueueFull)
+from repro.serving.endpoint import (DEPLOYING_E, DRAINING_E, FAILED_E,
+                                    ModelEndpoint, READY_E,
+                                    ServingBackend, STOPPED_E)
+
+__all__ = [
+    "DeadlineExceeded", "EndpointClosed", "InferenceEngine",
+    "InferenceRequest", "QueueFull", "ModelEndpoint", "ServingBackend",
+    "DEPLOYING_E", "READY_E", "DRAINING_E", "STOPPED_E", "FAILED_E",
+]
