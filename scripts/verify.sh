@@ -117,5 +117,143 @@ echo "== backend-parity + manifest test groups =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_backends.py tests/test_manifest.py
 
-echo "== tier-1 tests =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+echo "== chaos drill: seeded kill/drain replay + 2-node node-kill for" \
+     "both backends + serving-node kill (zero lost requests) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import tempfile
+import time
+
+from repro.platform.cluster import (Cluster, Node, Resources, RUNNING,
+                                    Scheduler)
+from repro.platform.faults import (DRAIN, FaultEvent, FaultInjector,
+                                   FaultSchedule, KILL)
+from repro.service.core import DLaaSCore
+
+
+def wait_until(cond, timeout=300.0, desc="condition"):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if cond():
+            return
+        time.sleep(0.02)
+    raise SystemExit(f"chaos drill FAILED: timed out waiting for {desc}")
+
+
+# -- determinism: the same seed must replay the identical transition log
+def drill(seed):
+    c = Cluster([Node(f"n{i}", Resources(cpus=8, gpus=2, memory_mb=16000))
+                 for i in range(2)])
+    s = Scheduler(c)
+    s.faults = FaultInjector(FaultSchedule.seeded(
+        seed, sorted(c.nodes), n_events=4, horizon=10,
+        kinds=(KILL, DRAIN)))
+    for _ in range(12):
+        s.tick()
+    assert s.faults.done()
+    return list(c.transitions)
+
+
+log = drill(29)
+assert log and log == drill(29), \
+    "chaos drill FAILED: seeded drill did not replay tick-exact"
+print(f"replay OK: {len(log)} transitions, identical across two runs")
+
+PS_MANIFEST = ("name: chaos-ps\nlearners: 2\ngpus: 1\nsteps: 40\n"
+               "checkpoint_every: 5\nframework:\n  name: repro-mlp\n"
+               "  d_in: 16\n  n_classes: 4\n")
+PJIT_MANIFEST = ("name: chaos-pjit\nlearners: 1\ngpus: 2\nsteps: 40\n"
+                 "batch_docs: 2\ncheckpoint_every: 10\n"
+                 "data:\n  n_docs: 32\n  seq_len: 16\n"
+                 "framework:\n  name: repro-lm\n  arch: stablelm-1.6b\n"
+                 "  distribution: pjit\n")
+
+
+# -- both backends: kill the busy node mid-run; the job must resume
+# from its checkpoint on the surviving node and complete
+def backend_drill(dist):
+    c = Cluster([Node(f"c{i}", Resources(cpus=16, gpus=2,
+                                         memory_mb=64000))
+                 for i in range(2)])
+    core = DLaaSCore(tempfile.mkdtemp(prefix=f"verify_chaos_{dist}_"),
+                     tick_interval=0.005, cluster=c)
+    try:
+        man = PJIT_MANIFEST if dist == "pjit" else PS_MANIFEST
+        mid = core.deploy_model(man)["model_id"]
+        tid = core.create_training(mid)["training_id"]
+        wait_until(lambda: core.training_status(tid)["steps_done"] >= 10
+                   and core.metrics.checkpoints(tid),
+                   desc=f"{dist}: 10 steps + a checkpoint")
+        core.pause_training(tid)      # gate at a step boundary
+        gid = f"{tid}-workers" if dist == "pjit" else f"{tid}-learners"
+        app = core.scheduler.apps[gid]
+        victim = [t.node for t in app.tasks.values()
+                  if t.state == RUNNING and t.node][0]
+        core.inject_faults(events=[
+            FaultEvent(KILL, victim, at_tick=core.cluster.clock + 1)])
+        wait_until(lambda: core.scheduler.faults.done(),
+                   desc=f"{dist}: fault fired")
+        wait_until(lambda: any("resumed from checkpoint" in l
+                               for l in core.training_logs(tid)),
+                   desc=f"{dist}: checkpoint resume on survivor")
+        core.resume_training(tid)
+        if core.wait_for(tid, timeout=300) != "COMPLETED":
+            raise SystemExit(f"chaos drill FAILED: {dist} job did not "
+                             f"complete after node kill")
+        st = core.training_status(tid)
+        assert st["steps_done"] >= 40, st
+        assert not core.cluster.nodes[victim].alive
+        print(f"{dist} drill OK: killed {victim}, resumed from "
+              f"checkpoint, {st['steps_done']} steps done")
+    finally:
+        core.close()
+
+
+backend_drill("software-ps")
+backend_drill("pjit")
+
+
+# -- serving: kill the endpoint's node with requests queued; the engine
+# must re-queue them and answer every one after re-placement
+def serving_drill():
+    c = Cluster([Node(f"s{i}", Resources(cpus=8, gpus=1,
+                                         memory_mb=16000))
+                 for i in range(2)])
+    core = DLaaSCore(tempfile.mkdtemp(prefix="verify_chaos_srv_"),
+                     tick_interval=0.005, cluster=c)
+    try:
+        eid = core.deploy_endpoint(arch="stablelm-1.6b", capacity=2,
+                                   max_new=2)["endpoint_id"]
+        wait_until(lambda: core.endpoint_status(eid)["state"] == "READY",
+                   desc="endpoint READY")
+        core.predict(eid, [1, 2, 3], max_new=2)        # warm the jits
+        core.pause_training(eid)      # hold the serve loop
+        eng = core.endpoints[eid].engine
+        reqs = [eng.submit([4, 5, 6], max_new=2),
+                eng.submit([7, 8], max_new=2)]
+        app = core.scheduler.apps[f"{eid}-servers"]
+        victim = [t.node for t in app.tasks.values()
+                  if t.state == RUNNING][0]
+        core.inject_faults(events=[
+            FaultEvent(KILL, victim, at_tick=core.cluster.clock + 1)])
+        wait_until(lambda: any(t.state == RUNNING and t.node != victim
+                               for t in app.tasks.values()),
+                   desc="endpoint re-placed on survivor")
+        core.resume_training(eid)
+        for r in reqs:
+            if not r.wait(180) or r.status != "DONE":
+                raise SystemExit("chaos drill FAILED: lost request "
+                                 f"{r.req_id}: {r.status}")
+        wait_until(lambda: core.endpoint_status(eid)["state"] == "READY",
+                   desc="endpoint READY after kill")
+        core.stop_endpoint(eid)
+        print(f"serving drill OK: killed {victim}, zero lost requests")
+    finally:
+        core.close()
+
+
+serving_drill()
+print("chaos drill OK")
+EOF
+
+echo "== tier-1 tests (-rs: every skip must name its reason) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -rs "$@"

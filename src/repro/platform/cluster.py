@@ -44,6 +44,14 @@ class Resources:
         self.memory_mb += other.memory_mb
 
 
+# node lifecycle states (k8s-style). Static seed nodes start READY;
+# nodes joining through Cluster.register_node start REGISTERING and
+# must heartbeat before they accept work. DEAD is reached by an
+# explicit failure or by missing heartbeats.
+NODE_REGISTERING, NODE_READY, NODE_DRAINING, NODE_DEAD = (
+    "REGISTERING", "READY", "DRAINING", "DEAD")
+
+
 @dataclass
 class Node:
     name: str
@@ -52,11 +60,22 @@ class Node:
     alive: bool = True
     draining: bool = False
     gpu_responsive: bool = True        # the colloquium failure mode
+    state: str = NODE_READY
+    spot: bool = False                 # preemptible: cheaper fair-share
+    cost_factor: float = 1.0           # fair-share cost multiplier
+    managed: bool = False              # heartbeat-supervised membership
+    last_heartbeat: int = 0            # cluster logical clock
+    partitioned: bool = False          # network fault: heartbeats lost
+    heartbeat_delay: int = 0           # ticks the agent stays silent
 
     def __post_init__(self):
         if self.free is None:
             self.free = Resources(self.capacity.cpus, self.capacity.gpus,
                                   self.capacity.memory_mb)
+
+    @property
+    def schedulable(self) -> bool:
+        return self.state == NODE_READY
 
 
 # task states (Marathon-like)
@@ -94,25 +113,163 @@ class App:
     run: Optional[Callable] = None
     tenant: str = "default"
     priority: int = 0
+    # gang apps (SPMD pjit workers, serving endpoints) lose/migrate all
+    # tasks as one unit: a node dying or draining under one member
+    # preempts the whole app so it reincarnates together
+    gang: bool = False
 
 
 class Cluster:
-    def __init__(self, nodes: List[Node]):
+    """Node membership + allocation. Time is a logical clock advanced by
+    ``tick()`` (driven from Scheduler.tick): heartbeats, their expiry and
+    every lifecycle transition are expressed in ticks, so a seeded fault
+    schedule replays to an identical transition log."""
+
+    #: ticks a managed node may stay silent before it is declared DEAD
+    HEARTBEAT_TIMEOUT = 3
+
+    def __init__(self, nodes: List[Node],
+                 heartbeat_timeout: Optional[int] = None):
         self.nodes: Dict[str, Node] = {n.name: n for n in nodes}
+        self.clock = 0
+        self.heartbeat_timeout = heartbeat_timeout or self.HEARTBEAT_TIMEOUT
+        # ordered lifecycle log: (tick, node, from_state, to_state, reason)
+        self.transitions: List[tuple] = []
+        self._agents: Dict[str, object] = {}     # name -> NodeWatchdog
+        self._listeners: List[Callable] = []     # capacity-change subs
         self._lock = threading.RLock()
+
+    # ---- lifecycle state machine ------------------------------------------
+    def _transition(self, node: Node, state: str, reason: str):
+        if node.state == state:
+            return
+        prev = node.state
+        node.state = state
+        node.alive = state not in (NODE_DEAD,)
+        node.draining = state == NODE_DRAINING
+        self.transitions.append((self.clock, node.name, prev, state,
+                                 reason))
+        if state in (NODE_READY, NODE_DEAD):
+            self._notify()
+
+    def _notify(self):
+        for cb in list(self._listeners):
+            try:
+                cb(self)
+            except Exception as e:       # observers must not wedge ticks
+                print(f"[cluster] capacity listener failed: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+
+    def subscribe(self, cb: Callable[["Cluster"], None]):
+        """Register a capacity-change listener (fired when a node becomes
+        READY or DEAD — the elastic-rescale trigger)."""
+        with self._lock:
+            self._listeners.append(cb)
+
+    def register_node(self, node: Node, *, spot: bool = False,
+                      cost_factor: Optional[float] = None) -> Node:
+        """Elastic join: the node enters REGISTERING and becomes READY on
+        its first heartbeat (published by its NodeWatchdog each tick)."""
+        from repro.platform.watchdog import NodeWatchdog
+        with self._lock:
+            node.managed = True
+            node.spot = spot
+            if cost_factor is not None:
+                node.cost_factor = cost_factor
+            elif spot:
+                node.cost_factor = 0.5     # preemptible capacity is cheap
+            node.state = NODE_REGISTERING
+            node.last_heartbeat = self.clock
+            self.nodes[node.name] = node
+            self._agents[node.name] = NodeWatchdog(self, node.name)
+            self.transitions.append((self.clock, node.name, "-",
+                                     NODE_REGISTERING, "node joined"))
+            return node
+
+    def remove_node(self, name: str, reason: str = "scaled down") -> bool:
+        """Remove a node that holds no work (fully free or DEAD)."""
+        with self._lock:
+            n = self.nodes.get(name)
+            if n is None:
+                return False
+            busy = n.free.gpus != n.capacity.gpus or \
+                n.free.cpus != n.capacity.cpus
+            if n.state != NODE_DEAD and busy:
+                return False
+            self.transitions.append((self.clock, name, n.state,
+                                     "REMOVED", reason))
+            self.nodes.pop(name)
+            self._agents.pop(name, None)
+            self._notify()
+            return True
+
+    def node_heartbeat(self, name: str):
+        """Heartbeat from a node's watchdog agent. Partitioned nodes'
+        beats are dropped on the floor — that IS the partition."""
+        with self._lock:
+            n = self.nodes.get(name)
+            if n is None or n.partitioned or n.state == NODE_DEAD:
+                return
+            n.last_heartbeat = self.clock
+            if n.state == NODE_REGISTERING:
+                self._transition(n, NODE_READY, "first heartbeat")
+
+    def drain_node(self, name: str, reason: str = "drain requested"):
+        with self._lock:
+            n = self.nodes[name]
+            if n.state in (NODE_READY, NODE_REGISTERING):
+                self._transition(n, NODE_DRAINING, reason)
+
+    def tick(self):
+        """Advance the logical clock one step: pump node agents (each
+        live, un-partitioned managed node self-reports) and expire the
+        heartbeats of nodes that stayed silent too long."""
+        with self._lock:
+            self.clock += 1
+            for agent in list(self._agents.values()):
+                agent.beat()
+            for n in self.nodes.values():
+                if n.managed and n.state != NODE_DEAD and \
+                        self.clock - n.last_heartbeat > \
+                        self.heartbeat_timeout:
+                    self._transition(
+                        n, NODE_DEAD,
+                        f"missed heartbeats for "
+                        f"{self.clock - n.last_heartbeat} ticks")
 
     # ---- fault injection --------------------------------------------------
     def fail_node(self, name: str):
         with self._lock:
-            self.nodes[name].alive = False
+            self._transition(self.nodes[name], NODE_DEAD, "node failed")
 
     def recover_node(self, name: str):
         with self._lock:
             n = self.nodes[name]
-            n.alive = True
-            n.draining = False
+            n.partitioned = False
+            n.heartbeat_delay = 0
+            n.last_heartbeat = self.clock
             n.free = Resources(n.capacity.cpus, n.capacity.gpus,
                                n.capacity.memory_mb)
+            self._transition(n, NODE_READY, "node recovered")
+
+    def partition_node(self, name: str):
+        """Network partition: the node keeps running its tasks but its
+        heartbeats no longer arrive; after ``heartbeat_timeout`` ticks
+        the cluster declares it DEAD (managed nodes only)."""
+        with self._lock:
+            self.nodes[name].partitioned = True
+
+    def heal_partition(self, name: str):
+        with self._lock:
+            n = self.nodes[name]
+            n.partitioned = False
+            n.last_heartbeat = self.clock
+
+    def delay_heartbeats(self, name: str, ticks: int):
+        """The node's agent stays silent for ``ticks`` ticks (slow node /
+        GC pause); longer than the timeout means a spurious DEAD."""
+        with self._lock:
+            self.nodes[name].heartbeat_delay = int(ticks)
 
     def make_gpu_unresponsive(self, name: str):
         with self._lock:
@@ -122,13 +279,16 @@ class Cluster:
     def allocate(self, res: Resources, *,
                  schedulable: Callable[[Node], bool]) -> Optional[str]:
         with self._lock:
-            # best-fit: fewest free GPUs that still fit (bin packing)
+            # best-fit: fewest free GPUs that still fit (bin packing);
+            # spot nodes first within a fit class, so cheap capacity
+            # absorbs load and on-demand nodes can drain when idle
             cands = [n for n in self.nodes.values()
-                     if n.alive and not n.draining and res.fits(n.free)
+                     if n.schedulable and res.fits(n.free)
                      and schedulable(n)]
             if not cands:
                 return None
-            cands.sort(key=lambda n: (n.free.gpus, n.free.cpus))
+            cands.sort(key=lambda n: (n.free.gpus, n.free.cpus,
+                                      not n.spot, n.name))
             node = cands[0]
             node.free.sub(res)
             return node.name
@@ -145,6 +305,32 @@ class Cluster:
                        if n.alive and not n.draining)
             return free / tot
 
+    def free_gpus(self) -> int:
+        with self._lock:
+            return sum(n.free.gpus for n in self.nodes.values()
+                       if n.schedulable)
+
+    def snapshot(self) -> Dict:
+        """Status-surface view: per-node lifecycle + the transition log
+        tail (REST GET /v1/cluster and the CLI render this)."""
+        with self._lock:
+            return {
+                "clock": self.clock,
+                "nodes": [{
+                    "name": n.name, "state": n.state, "spot": n.spot,
+                    "cost_factor": n.cost_factor, "managed": n.managed,
+                    "gpus": n.capacity.gpus, "free_gpus": n.free.gpus,
+                    "cpus": n.capacity.cpus, "free_cpus": n.free.cpus,
+                    "heartbeat_age": (self.clock - n.last_heartbeat
+                                      if n.managed else None),
+                } for n in sorted(self.nodes.values(),
+                                  key=lambda n: n.name)],
+                "transitions": [
+                    {"tick": t, "node": n, "from": a, "to": b,
+                     "reason": r}
+                    for t, n, a, b, r in self.transitions[-50:]],
+            }
+
 
 class HealthChecker:
     """Probes GPU responsiveness and drains bad nodes — the fix for the
@@ -156,9 +342,9 @@ class HealthChecker:
         self.events: List[str] = []
 
     def probe(self):
-        for n in self.cluster.nodes.values():
+        for n in list(self.cluster.nodes.values()):
             if n.alive and not n.gpu_responsive and not n.draining:
-                n.draining = True
+                self.cluster.drain_node(n.name, "unresponsive GPU")
                 self.events.append(f"drained {n.name}: unresponsive GPU")
 
 
@@ -183,6 +369,10 @@ class Scheduler:
         self._seq = itertools.count()
         self._lock = threading.RLock()
         self._threads: Dict[str, threading.Thread] = {}
+        # optional tick-driven companions (attached by the service /
+        # chaos harness): an Autoscaler and a FaultInjector
+        self.autoscaler = None
+        self.faults = None
 
     # ---- submission -----------------------------------------------------
     def submit(self, app: App, *, tenant: Optional[str] = None,
@@ -383,27 +573,66 @@ class Scheduler:
 
     # ---- scheduling tick ---------------------------------------------------
     def tick(self):
-        """One scheduling round: health probe, node-failure detection,
-        fair-share deficit refresh, queue placement (with preemption)."""
+        """One scheduling round: clock/heartbeats, fault injection,
+        health probe, node-failure detection, drain migration, fair-share
+        deficit refresh, queue placement (with preemption), autoscaling."""
         with self._lock:
+            self.cluster.tick()
+            if self.faults is not None:
+                self.faults.step(self)
             if self.health:
                 self.health.probe()
             # detect lost tasks on dead nodes -> reschedule (paper: 'if a
             # node fails, the cluster manager automatically restarts the
             # jobs on that node on a different node')
             for app in self.apps.values():
+                lost_gang = False
                 for t in app.tasks.values():
                     if t.state == RUNNING and t.node and \
-                            not self.cluster.nodes[t.node].alive:
+                            (t.node not in self.cluster.nodes or
+                             not self.cluster.nodes[t.node].alive):
                         self._release(t)
                         self._set_state(t, LOST, "node failed")
+                        # the body thread (if any) outlives its node in
+                        # the simulation: tell it to yield so the next
+                        # incarnation can start
+                        t.preempt_event.set()
                         if t.restarts < app.max_restarts:
                             t.restarts += 1
+                            lost_gang = lost_gang or app.gang
                             self._set_state(t, STAGING,
                                             f"restart #{t.restarts}")
                             self.queue.push(t, app.tenant, app.priority)
+                if lost_gang:
+                    # an SPMD gang cannot limp along with a lost member:
+                    # evict the survivors too, so the whole gang
+                    # reincarnates together (from the last checkpoint)
+                    self.preempt_app(app.app_id)
+            self._migrate_draining()
             self.queue.refresh_deficits()
             self._place_round()
+            if self.autoscaler is not None:
+                self.autoscaler.step()
+
+    def _migrate_draining(self):
+        """Elastic rescale on shrinking capacity: work running on a
+        DRAINING node is requeued exactly like preemption — gang apps as
+        one unit — and resumes from its last checkpoint elsewhere."""
+        draining = {n.name for n in self.cluster.nodes.values()
+                    if n.draining and n.alive}
+        if not draining:
+            return
+        for app in list(self.apps.values()):
+            on_node = [t for t in app.tasks.values()
+                       if t.state == RUNNING and t.node in draining]
+            if not on_node:
+                continue
+            if app.gang:
+                self.preempt_app(app.app_id)
+            else:
+                evicted = sum(1 for t in on_node if self._preempt_task(t))
+                if evicted:
+                    self.queue.tenant(app.tenant).preemptions += 1
 
     def _place_round(self):
         # re-sort after every successful placement so deficit spending
@@ -429,7 +658,10 @@ class Scheduler:
         if node is None:
             return False                       # backfill: try next entry
         self.queue.remove(entry)
-        self.queue.charge(entry.tenant, t)
+        # preemptible capacity is billed (and spends fair-share deficit)
+        # at the node's discounted cost factor
+        self.queue.charge(entry.tenant, t,
+                          cost=self.cluster.nodes[node].cost_factor)
         t.node = node
         t.preempt_event.clear()
         nd = self.cluster.nodes[node]

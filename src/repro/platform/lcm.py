@@ -272,7 +272,12 @@ class LifecycleManager:
         for g in plan.groups:
             app = App(app_id=self.group_app_id(plan.job_id, g.role),
                       resources=g.resources, count=g.count,
-                      run=self._wrap_member(plan.job_id, g))
+                      run=self._wrap_member(plan.job_id, g),
+                      # a group that cannot lose any member (pjit SPMD
+                      # gang, serving endpoint) migrates as one unit
+                      # when a node under it drains or dies
+                      gang=(g.role != "ps"
+                            and plan.min_alive_fraction >= 1.0))
             self.scheduler.submit(app, tenant=plan.tenant,
                                   priority=plan.priority)
 
@@ -311,6 +316,15 @@ class LifecycleManager:
                 pass
             out[m] = rec
         return out
+
+    def max_step(self, job_id: str) -> Optional[int]:
+        """Highest step any member has heartbeated — the chaos harness's
+        job-progress trigger (platform/faults.py) reads training
+        progress through this hook instead of poking at job internals."""
+        steps = [r["heartbeat"]["step"]
+                 for r in self.member_statuses(job_id).values()
+                 if "heartbeat" in r and "step" in r["heartbeat"]]
+        return max(steps) if steps else None
 
     def monitor(self, job_id: str) -> str:
         """One monitoring pass; returns the (possibly updated) job state.

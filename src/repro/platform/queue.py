@@ -52,6 +52,7 @@ class Tenant:
     deficit: float = 0.0                  # fair-share credit (DRR)
     in_use: Resources = field(default_factory=lambda: Resources(0, 0, 0))
     gpu_seconds: float = 0.0              # lifetime metering
+    cost_units: float = 0.0               # gpu_seconds x node cost factor
     placements: int = 0
     preemptions: int = 0                  # times this tenant was preempted
 
@@ -65,6 +66,7 @@ class Tenant:
             "in_use": {"cpus": self.in_use.cpus, "gpus": self.in_use.gpus,
                        "memory_mb": self.in_use.memory_mb},
             "gpu_seconds": round(self.gpu_seconds, 3),
+            "cost_units": round(self.cost_units, 3),
             "placements": self.placements,
             "preemptions": self.preemptions,
         }
@@ -94,7 +96,8 @@ class FairShareQueue:
         self.tenants: Dict[str, Tenant] = {}
         self._entries: List[QueueEntry] = []
         self._seq = itertools.count()
-        self._charged_at: Dict[str, float] = {}   # task_id -> place time
+        # task_id -> (place time, node cost factor)
+        self._charged_at: Dict[str, tuple] = {}
 
     # ---- tenant registry --------------------------------------------------
     def tenant(self, name: str) -> Tenant:
@@ -203,23 +206,29 @@ class FairShareQueue:
             t = self.tenant(name)
             t.deficit += t.weight / total_w
 
-    def charge(self, tenant: str, task: "Task"):
-        """Record a placement: consume deficit, track concurrent usage."""
+    def charge(self, tenant: str, task: "Task", cost: float = 1.0):
+        """Record a placement: consume deficit, track concurrent usage.
+        ``cost`` is the node's cost factor (< 1 for spot/preemptible
+        capacity): it scales both the fair-share spend and the metered
+        cost, so running on cheap nodes burns less of a tenant's share."""
         t = self.tenant(tenant)
         t.in_use.add(task.resources)
-        t.deficit -= max(1.0, float(task.resources.gpus))
+        t.deficit -= max(1.0, float(task.resources.gpus)) * cost
         t.placements += 1
-        self._charged_at[task.task_id] = time.time()
+        self._charged_at[task.task_id] = (time.time(), cost)
 
     def credit(self, tenant: str, task: "Task"):
-        """Record a release: return concurrent usage, meter gpu-seconds.
-        No-op for tasks that were never charged (still queued)."""
+        """Record a release: return concurrent usage, meter gpu-seconds
+        and billed cost. No-op for tasks never charged (still queued)."""
         placed = self._charged_at.pop(task.task_id, None)
         if placed is None:
             return
+        placed_ts, cost = placed
         t = self.tenant(tenant)
         t.in_use.sub(task.resources)
-        t.gpu_seconds += task.resources.gpus * (time.time() - placed)
+        held = time.time() - placed_ts
+        t.gpu_seconds += task.resources.gpus * held
+        t.cost_units += task.resources.gpus * held * cost
 
     def refund(self, tenant: str, task: "Task"):
         """Undo a charge for a placement that never ran (e.g. landed on
@@ -229,9 +238,10 @@ class FairShareQueue:
         placed = self._charged_at.pop(task.task_id, None)
         if placed is None:
             return
+        _, cost = placed
         t = self.tenant(tenant)
         t.in_use.sub(task.resources)
-        t.deficit += max(1.0, float(task.resources.gpus))
+        t.deficit += max(1.0, float(task.resources.gpus)) * cost
         t.placements -= 1
 
     # ---- introspection ----------------------------------------------------

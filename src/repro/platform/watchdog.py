@@ -103,3 +103,26 @@ class Watchdog:
         """Simulate a container crash: the session expires WITHOUT any
         status update — the LCM must notice via the ephemeral znode."""
         self.session.expire()
+
+
+class NodeWatchdog:
+    """Node-side sidecar: the membership analogue of the container
+    watchdog. Every managed node runs one; each cluster tick it reports
+    the node alive (``Cluster.node_heartbeat``). Faults act on the
+    channel, not the agent: a partition drops the beats in flight, a
+    delay keeps the agent silent for N ticks, a crash removes the node
+    (and the agent with it) — and after ``heartbeat_timeout`` silent
+    ticks the cluster declares the node DEAD."""
+
+    def __init__(self, cluster, node_name: str):
+        self.cluster = cluster
+        self.node_name = node_name
+
+    def beat(self):
+        node = self.cluster.nodes.get(self.node_name)
+        if node is None or node.state == "DEAD":
+            return
+        if node.heartbeat_delay > 0:
+            node.heartbeat_delay -= 1
+            return
+        self.cluster.node_heartbeat(self.node_name)

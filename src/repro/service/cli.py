@@ -22,6 +22,11 @@ the REST API').
                       [--max-new N --deadline S]
   dlaas serve stop    --id <endpoint-id>        # drain, then stop
   dlaas queue                               # fair-share queue + tenants
+  dlaas cluster status                      # node lifecycle + autoscaler
+  dlaas cluster add    [--gpus G --cpus C --memory M --spot --name N]
+  dlaas cluster drain  --node <name>
+  dlaas train rescale  --id <tid>           # rebuild gang at current
+                                            # capacity (elastic rescale)
   dlaas tenant list
   dlaas tenant set    --name T [--weight W --gpus G --cpus C --memory M]
 
@@ -81,7 +86,7 @@ def main(argv=None):
                    help="software-PS shard count (default: manifest's "
                         "framework.ps_shards, else 4)")
     tsub.add_parser("list")
-    for name in ("status", "logs", "delete", "download"):
+    for name in ("status", "logs", "delete", "download", "rescale"):
         p = tsub.add_parser(name)
         p.add_argument("--id", required=True)
         if name == "download":
@@ -116,6 +121,19 @@ def main(argv=None):
                            help="per-request deadline in seconds")
 
     sub.add_parser("queue")
+
+    cl = sub.add_parser("cluster")
+    clsub = cl.add_subparsers(dest="sub", required=True)
+    clsub.add_parser("status")
+    ca = clsub.add_parser("add")
+    ca.add_argument("--gpus", type=int)
+    ca.add_argument("--cpus", type=float)
+    ca.add_argument("--memory", type=int)
+    ca.add_argument("--spot", action="store_true",
+                    help="preemptible node: discounted fair-share cost")
+    ca.add_argument("--name")
+    cd = clsub.add_parser("drain")
+    cd.add_argument("--node", required=True)
 
     tn = sub.add_parser("tenant")
     tnsub = tn.add_subparsers(dest="sub", required=True)
@@ -167,6 +185,9 @@ def main(argv=None):
             out = _req(f"{base}/v1/trainings/{args.id}/logs",
                        token=args.token)
             print("\n".join(out.get("logs", [])))
+    elif args.cmd == "train" and args.sub == "rescale":
+        print(json.dumps(_req(f"{base}/v1/trainings/{args.id}/rescale",
+                              "POST", {}, args.token)))
     elif args.cmd == "train" and args.sub == "delete":
         print(json.dumps(_req(f"{base}/v1/trainings/{args.id}", "DELETE",
                               token=args.token)))
@@ -205,6 +226,21 @@ def main(argv=None):
     elif args.cmd == "queue":
         print(json.dumps(_req(f"{base}/v1/queue", token=args.token),
                          indent=1))
+    elif args.cmd == "cluster" and args.sub == "status":
+        print(json.dumps(_req(f"{base}/v1/cluster", token=args.token),
+                         indent=1))
+    elif args.cmd == "cluster" and args.sub == "add":
+        body = {k: getattr(args, k) for k in ("gpus", "cpus", "name")
+                if getattr(args, k) is not None}
+        if args.memory is not None:
+            body["memory_mb"] = args.memory
+        if args.spot:
+            body["spot"] = True
+        print(json.dumps(_req(f"{base}/v1/cluster/nodes", "POST", body,
+                              args.token)))
+    elif args.cmd == "cluster" and args.sub == "drain":
+        print(json.dumps(_req(f"{base}/v1/cluster/drain", "POST",
+                              {"node": args.node}, args.token)))
     elif args.cmd == "tenant" and args.sub == "list":
         print(json.dumps(_req(f"{base}/v1/tenants", token=args.token),
                          indent=1))

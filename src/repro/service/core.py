@@ -67,13 +67,23 @@ def _enable_jax_compile_cache():
 class DLaaSCore:
     def __init__(self, workdir: str, *, cluster: Optional[Cluster] = None,
                  health_checks: bool = True, tick_interval: float = 0.02,
-                 admin_users: Optional[set] = None):
+                 admin_users: Optional[set] = None,
+                 autoscale: Optional[Any] = None):
         self.admin_users = admin_users
         _enable_jax_compile_cache()
         self.zk = ZooKeeper()
         self.cluster = cluster or default_cluster()
         self.scheduler = Scheduler(self.cluster,
                                    health_checks=health_checks)
+        self.autoscaler = None
+        if autoscale:
+            # autoscale=True uses defaults; a dict is kwargs for the
+            # Autoscaler (max_nodes, node_gpus, spot, spot_cost, ...)
+            from repro.platform.autoscale import Autoscaler
+            kw = autoscale if isinstance(autoscale, dict) else {}
+            self.autoscaler = Autoscaler(self.scheduler, **kw)
+            self.scheduler.autoscaler = self.autoscaler
+        self._transition_idx = 0      # cluster log -> metrics mirror
         self.lcm = LifecycleManager(self.zk, self.scheduler)
         self.metrics = MetricsService()
         self.log_parser = LogParserService(self.metrics)
@@ -104,6 +114,7 @@ class DLaaSCore:
         while not self._stop.is_set():
             try:
                 self.scheduler.tick()
+                self._mirror_transitions()
             except Exception as e:
                 self._tick_error("scheduler", e)
             for jid in list(self.trainings):
@@ -146,6 +157,71 @@ class DLaaSCore:
 
     def _meter(self, user: str):
         self.usage[user] = self.usage.get(user, 0) + 1
+
+    def _mirror_transitions(self):
+        """Mirror new node-lifecycle transitions into the metrics
+        service (counters + event stream under the 'cluster' job id)."""
+        log = self.cluster.transitions
+        new = log[self._transition_idx:]
+        self._transition_idx = len(log)
+        for tick, node, prev, state, reason in new:
+            self.metrics.incr("cluster", "node_transitions_total")
+            self.metrics.incr("cluster", f"node_to_{state.lower()}")
+            self.metrics.event("cluster", "node_transition", tick,
+                               node=node, prev=prev, state=state,
+                               reason=reason)
+
+    # ----------------------------------------------------------------- cluster
+    def cluster_status(self) -> Dict:
+        """The elastic-provisioning status surface: node lifecycle
+        states, transition log tail, autoscaler + fault-drill stats."""
+        out = self.cluster.snapshot()
+        out["autoscaler"] = (self.autoscaler.stats()
+                             if self.autoscaler else None)
+        faults = self.scheduler.faults
+        out["faults"] = ({"fired": faults.fired, "done": faults.done()}
+                         if faults is not None else None)
+        return out
+
+    def add_node(self, *, gpus: int = 4, cpus: float = 16.0,
+                 memory_mb: int = 64000, spot: bool = False,
+                 name: Optional[str] = None) -> Dict:
+        """Admin: elastically join a node (REGISTERING until its first
+        heartbeat lands, one tick later)."""
+        name = name or f"node-x{uuid.uuid4().hex[:6]}"
+        if name in self.cluster.nodes:
+            raise ValueError(f"node {name!r} already exists")
+        self.cluster.register_node(
+            Node(name, Resources(cpus=cpus, gpus=gpus,
+                                 memory_mb=memory_mb)), spot=spot)
+        return {"node": name, "state": "REGISTERING", "spot": spot}
+
+    def drain_node(self, name: str) -> Dict:
+        """Admin: cordon + drain a node. Work running there is requeued
+        like a preemption (gangs as one unit) and resumes elsewhere."""
+        if name not in self.cluster.nodes:
+            raise KeyError(name)
+        self.cluster.drain_node(name, "drain requested via API")
+        return {"node": name, "state": self.cluster.nodes[name].state}
+
+    def inject_faults(self, *, seed: Optional[int] = None,
+                      events: Optional[List] = None,
+                      nodes: Optional[List[str]] = None,
+                      n_events: int = 3, horizon: int = 40) -> Dict:
+        """Attach a fault-injection schedule (chaos drill). Either an
+        explicit event list or a seeded schedule over ``nodes``."""
+        from repro.platform.faults import (FaultInjector, FaultSchedule)
+        if events is None:
+            if seed is None:
+                raise ValueError("inject_faults needs events= or seed=")
+            nodes = nodes or sorted(self.cluster.nodes)
+            sched = FaultSchedule.seeded(seed, nodes, n_events=n_events,
+                                         horizon=horizon)
+        else:
+            sched = FaultSchedule(events)
+        self.scheduler.faults = FaultInjector(sched, lcm=self.lcm,
+                                              metrics=self.metrics)
+        return {"scheduled": [e.describe() for e in sched]}
 
     # ----------------------------------------------------------------- tenants
     def register_tenant(self, name: str, *, weight: Optional[float] = None,
@@ -347,6 +423,18 @@ class DLaaSCore:
         """Ask the running job to checkpoint at its next step boundary."""
         backend, handle = self._handle(job_id)
         backend.checkpoint(handle)
+
+    def rescale_training(self, job_id: str) -> Dict:
+        """Elastic rescale: requeue the job's task groups exactly like a
+        preemption. The next incarnation rebuilds through the backend's
+        per-incarnation path (the pjit gang rebuilds its step and
+        restores the latest checkpoint; the software-PS learner group
+        re-forms around the PS) against whatever capacity now exists."""
+        if job_id not in self.trainings:
+            raise KeyError(job_id)
+        for app_id in self.lcm._app_ids(job_id):
+            self.scheduler.preempt_app(app_id)
+        return {"training_id": job_id, "status": self.lcm.monitor(job_id)}
 
     def training_logs(self, job_id: str, member: Optional[str] = None
                       ) -> List[str]:

@@ -46,6 +46,15 @@ Endpoints (v1):
                                          analogue of the visualization API)
   GET    /v1/trainings/<id>/metrics      common JSON-list metric format
   GET    /v1/trainings/<id>/model        trained weights (binary)
+  GET    /v1/cluster                     node lifecycle states, transition
+                                         log tail, autoscaler + chaos
+                                         drill stats
+  POST   /v1/cluster/nodes               {gpus, cpus, memory_mb, spot,
+                                          name} — elastically join a node
+  POST   /v1/cluster/drain               {node} — cordon + drain; running
+                                         work requeues like a preemption
+  POST   /v1/trainings/<id>/rescale      requeue the job's gang so it
+                                         rebuilds at current capacity
   GET    /v1/queue                       fair-share queue + tenant shares
   GET    /v1/tenants                     per-tenant quota accounting
   POST   /v1/tenants                     {name, weight, quota_gpus, ...}
@@ -139,6 +148,24 @@ class _Handler(BaseHTTPRequestHandler):
                         body["model_id"], body.get("overrides"), user,
                         tenant=body.get("tenant"),
                         priority=body.get("priority")), 201)
+            if len(parts) == 4 and parts[:2] == ["v1", "trainings"] \
+                    and parts[3] == "rescale":
+                return self._json(self.core.rescale_training(parts[2]))
+            if parts == ["v1", "cluster", "nodes"]:
+                if not self.core.is_admin(user):
+                    return self._err(
+                        403, f"user {user!r} may not administer nodes")
+                body = self._body()
+                kw = {k: body[k] for k in
+                      ("gpus", "cpus", "memory_mb", "spot", "name")
+                      if body.get(k) is not None}
+                return self._json(self.core.add_node(**kw), 201)
+            if parts == ["v1", "cluster", "drain"]:
+                if not self.core.is_admin(user):
+                    return self._err(
+                        403, f"user {user!r} may not administer nodes")
+                body = self._body()
+                return self._json(self.core.drain_node(body["node"]))
             if parts == ["v1", "tenants"]:
                 if not self.core.is_admin(user):
                     return self._err(
@@ -209,6 +236,8 @@ class _Handler(BaseHTTPRequestHandler):
                 self.end_headers()
                 self.wfile.write(data)
                 return
+            if parts == ["v1", "cluster"]:
+                return self._json(self.core.cluster_status())
             if parts == ["v1", "queue"]:
                 return self._json(self.core.queue_status())
             if parts == ["v1", "tenants"]:

@@ -1,0 +1,252 @@
+"""Elastic provisioning layer: node lifecycle state machine (heartbeat
+driven), autoscaler scale-up/down, spot cost accounting, gang rescale on
+capacity change, and the deterministic fault-injection harness."""
+import time
+
+import pytest
+
+from repro.platform.autoscale import Autoscaler
+from repro.platform.cluster import (App, Cluster, NODE_DEAD, NODE_DRAINING,
+                                    NODE_READY, NODE_REGISTERING, Node,
+                                    PREEMPTED, Resources, RUNNING,
+                                    Scheduler, STAGING)
+from repro.platform.faults import (DRAIN, FaultEvent, FaultInjector,
+                                   FaultSchedule, KILL)
+
+
+def mk_node(name, gpus=2, cpus=8.0, mem=16000):
+    return Node(name, Resources(cpus=cpus, gpus=gpus, memory_mb=mem))
+
+
+def two_gpu_app(app_id, count=1, gang=False):
+    return App(app_id, Resources(cpus=1, gpus=2, memory_mb=100),
+               count=count, gang=gang)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+
+def test_registered_node_becomes_ready_on_first_heartbeat():
+    c = Cluster([mk_node("n0")])
+    joined = c.register_node(mk_node("n1"))
+    assert joined.state == NODE_REGISTERING
+    assert not joined.schedulable
+    c.tick()                                  # agent heartbeats
+    assert joined.state == NODE_READY and joined.schedulable
+    assert [(t[1], t[2], t[3]) for t in c.transitions] == [
+        ("n1", "-", NODE_REGISTERING),
+        ("n1", NODE_REGISTERING, NODE_READY)]
+
+
+def test_partitioned_node_expires_to_dead():
+    c = Cluster([mk_node("n0")])
+    c.register_node(mk_node("n1"))
+    c.tick()
+    c.partition_node("n1")
+    for _ in range(c.heartbeat_timeout + 1):
+        c.tick()
+    n1 = c.nodes["n1"]
+    assert n1.state == NODE_DEAD and not n1.alive
+    assert "missed heartbeats" in c.transitions[-1][4]
+
+
+def test_heartbeat_delay_below_timeout_survives():
+    c = Cluster([])
+    c.register_node(mk_node("n1"))
+    c.tick()
+    c.delay_heartbeats("n1", c.heartbeat_timeout - 1)
+    for _ in range(c.heartbeat_timeout + 2):
+        c.tick()
+    assert c.nodes["n1"].state == NODE_READY  # slow but not dead
+
+
+def test_recover_returns_dead_node_to_ready():
+    c = Cluster([])
+    c.register_node(mk_node("n1"))
+    c.tick()
+    c.fail_node("n1")
+    assert c.nodes["n1"].state == NODE_DEAD
+    c.recover_node("n1")
+    n1 = c.nodes["n1"]
+    assert n1.state == NODE_READY and n1.schedulable
+    assert n1.free.gpus == n1.capacity.gpus
+
+
+def test_static_seed_nodes_never_expire():
+    c = Cluster([mk_node("n0")])
+    for _ in range(10 * c.heartbeat_timeout):
+        c.tick()
+    assert c.nodes["n0"].state == NODE_READY  # only managed nodes expire
+
+
+def test_remove_node_refuses_busy_node():
+    c = Cluster([mk_node("n0")])
+    c.allocate(Resources(cpus=1, gpus=1, memory_mb=100),
+               schedulable=lambda n: True)
+    assert not c.remove_node("n0")
+    c.fail_node("n0")
+    assert c.remove_node("n0")                # DEAD nodes go regardless
+    assert "n0" not in c.nodes
+
+
+def test_capacity_listener_fires_on_ready_and_dead():
+    c = Cluster([])
+    seen = []
+    c.subscribe(lambda cl: seen.append(
+        {n.name: n.state for n in cl.nodes.values()}))
+    c.register_node(mk_node("n1"))
+    c.tick()                                  # -> READY
+    c.fail_node("n1")                         # -> DEAD
+    assert seen == [{"n1": NODE_READY}, {"n1": NODE_DEAD}]
+
+
+# ---------------------------------------------------------------------------
+# elastic rescale: drain migration + gang reincarnation
+# ---------------------------------------------------------------------------
+
+
+def test_draining_node_migrates_task_like_preemption():
+    c = Cluster([mk_node("n0"), mk_node("n1")])
+    s = Scheduler(c)
+    app = s.submit(two_gpu_app("job"), tenant="t")
+    s.tick()
+    t = app.tasks["job.0"]
+    assert t.state == RUNNING and t.node == "n0"
+    c.drain_node("n0", "maintenance")
+    s.tick()                                  # migrate + re-place
+    assert t.state == RUNNING and t.node == "n1"
+    assert s.queue.tenant("t").preemptions == 1
+    assert c.nodes["n0"].free.gpus == c.nodes["n0"].capacity.gpus
+
+
+def test_node_death_under_gang_preempts_whole_app():
+    c = Cluster([mk_node("n0"), mk_node("n1")])
+    s = Scheduler(c)
+    app = s.submit(two_gpu_app("gang", count=2, gang=True), tenant="t")
+    s.tick()
+    assert {t.node for t in app.tasks.values()} == {"n0", "n1"}
+    c.fail_node("n0")
+    s.tick()
+    # the lost member AND the surviving member were both requeued; only
+    # one fits on the remaining node, so exactly one is running again
+    assert all(t.node != "n0" for t in app.tasks.values())
+    running = [t for t in app.tasks.values() if t.state == RUNNING]
+    queued = [t for t in app.tasks.values()
+              if t.state in (STAGING, PREEMPTED)]
+    assert len(running) == 1 and len(queued) == 1
+    assert s.queue.tenant("t").preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_scales_up_for_backlog_and_back_down():
+    c = Cluster([mk_node("n0")])              # 2 GPUs of seed capacity
+    s = Scheduler(c)
+    s.autoscaler = Autoscaler(s, node_gpus=2, idle_ticks=3)
+    apps = [s.submit(two_gpu_app(f"j{i}"), tenant="t") for i in range(3)]
+    for _ in range(4):
+        s.tick()
+    assert s.counts().get(RUNNING, 0) == 3    # backlog absorbed
+    assert s.autoscaler.scale_ups == 2        # 4 residual GPUs / 2 per node
+    assert len(c.nodes) == 3
+    assert all(c.nodes[n].spot for n in s.autoscaler._mine)
+    for a in apps:
+        s.task_finished(f"{a.app_id}.0")
+    for _ in range(10):                       # idle -> drain -> reap
+        s.tick()
+    assert set(c.nodes) == {"n0"}             # seed node never touched
+    assert s.autoscaler.scale_downs == 2
+    assert any(t[3] == "REMOVED" for t in c.transitions)
+
+
+def test_autoscaler_ignores_quota_held_demand():
+    c = Cluster([mk_node("n0")])
+    s = Scheduler(c)
+    s.autoscaler = Autoscaler(s, node_gpus=2)
+    s.configure_tenant("capped", quota_gpus=2)
+    s.submit(two_gpu_app("a"), tenant="capped")
+    s.submit(two_gpu_app("b"), tenant="capped")   # held by quota
+    for _ in range(3):
+        s.tick()
+    assert s.autoscaler.scale_ups == 0        # adding nodes can't help
+
+
+def test_spot_placement_bills_discounted_cost():
+    c = Cluster([])
+    c.register_node(mk_node("s0"), spot=True)
+    s = Scheduler(c)
+    app = s.submit(two_gpu_app("j"), tenant="t")
+    s.tick()
+    assert app.tasks["j.0"].node == "s0"
+    time.sleep(0.05)                          # hold the GPUs measurably
+    s.task_finished("j.0")
+    ten = s.queue.tenant("t")
+    assert ten.gpu_seconds > 0
+    assert ten.cost_units == pytest.approx(0.5 * ten.gpu_seconds)
+
+
+def test_on_demand_placement_bills_full_cost():
+    c = Cluster([mk_node("n0")])
+    s = Scheduler(c)
+    s.submit(two_gpu_app("j"), tenant="t")
+    s.tick()
+    time.sleep(0.05)
+    s.task_finished("j.0")
+    ten = s.queue.tenant("t")
+    assert ten.cost_units == pytest.approx(ten.gpu_seconds)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_schedule_is_deterministic():
+    a = FaultSchedule.seeded(7, ["n0", "n1"], n_events=4, horizon=20)
+    b = FaultSchedule.seeded(7, ["n0", "n1"], n_events=4, horizon=20)
+    assert [e.describe() for e in a] == [e.describe() for e in b]
+    other = FaultSchedule.seeded(8, ["n0", "n1"], n_events=4, horizon=20)
+    assert [e.describe() for e in a] != [e.describe() for e in other]
+
+
+def test_step_triggered_fault_fires_at_job_progress():
+    class FakeLCM:
+        step = 3
+
+        def max_step(self, job_id):
+            return self.step
+
+    c = Cluster([mk_node("n0")])
+    s = Scheduler(c)
+    lcm = FakeLCM()
+    s.faults = FaultInjector(
+        FaultSchedule([FaultEvent(KILL, "n0", at_step=5, job_id="j")]),
+        lcm=lcm)
+    s.tick()
+    assert c.nodes["n0"].state == NODE_READY  # step 3 < 5: not yet
+    lcm.step = 5
+    s.tick()
+    assert c.nodes["n0"].state == NODE_DEAD
+    assert s.faults.done() and s.faults.fired[0]["applied"]
+
+
+def test_same_seed_replays_same_transition_log():
+    def drill(seed):
+        c = Cluster([mk_node(f"n{i}") for i in range(3)])
+        s = Scheduler(c)
+        s.faults = FaultInjector(FaultSchedule.seeded(
+            seed, list(c.nodes), n_events=4, horizon=10,
+            kinds=(KILL, DRAIN)))
+        for _ in range(12):
+            s.tick()
+        assert s.faults.done()
+        return list(c.transitions)
+
+    log = drill(13)
+    assert log                                 # the drill did something
+    assert log == drill(13)                    # tick-exact replay

@@ -1,0 +1,138 @@
+"""Fair-share scheduling under node churn — property tests.
+
+Random join/drain/fail/recover sequences against a live Scheduler must
+(1) never strand a queued job once capacity returns, (2) never let a
+tenant's concurrent usage exceed its quota, and (3) never bill spot
+capacity above the on-demand rate. The churn driver is shared between
+the hypothesis property (when installed) and a seeded deterministic
+sweep, so the invariants keep running on bare environments."""
+import random
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):             # keep decorated defs importable
+        return lambda f: f
+
+    settings = given
+
+    class st:                       # noqa: N801 — stand-in namespace
+        integers = staticmethod(lambda *a, **k: None)
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+from repro.platform.cluster import (App, Cluster, FINISHED, NODE_DEAD,
+                                    Node, Resources, RUNNING, Scheduler)
+
+TENANTS = ("alice", "capped")
+
+
+def _check_invariants(s):
+    for t in s.queue.tenants.values():
+        if t.quota is not None:
+            assert t.in_use.gpus <= t.quota.gpus, \
+                f"tenant {t.name} over quota: {t.in_use.gpus} gpus"
+        # spot discount can only lower the bill, never raise it
+        assert t.cost_units <= t.gpu_seconds + 1e-9, \
+            f"tenant {t.name} billed above the on-demand rate"
+
+
+def _run_churn(seed):
+    rng = random.Random(seed)
+    c = Cluster([Node("n0", Resources(cpus=16, gpus=4, memory_mb=64000))])
+    s = Scheduler(c, health_checks=False)
+    s.configure_tenant("capped", quota_gpus=2)
+    apps, seq = [], 0
+
+    for _ in range(rng.randrange(20, 40)):
+        op = rng.choice(("submit", "submit", "join", "drain", "fail",
+                         "recover", "finish", "tick"))
+        if op == "submit":
+            app = App(f"j{seq}", Resources(cpus=1, gpus=1, memory_mb=100),
+                      count=1, max_restarts=1000)
+            s.submit(app, tenant=rng.choice(TENANTS))
+            apps.append(app)
+            seq += 1
+        elif op == "join":
+            c.register_node(
+                Node(f"churn-{seq}", Resources(cpus=8, gpus=2,
+                                               memory_mb=16000)),
+                spot=rng.random() < 0.5)
+            seq += 1
+        elif op == "drain":
+            c.drain_node(rng.choice(sorted(c.nodes)), "churn")
+        elif op == "fail":
+            c.fail_node(rng.choice(sorted(c.nodes)))
+        elif op == "recover":
+            dead = sorted(n.name for n in c.nodes.values()
+                          if n.state == NODE_DEAD)
+            if dead:
+                c.recover_node(rng.choice(dead))
+        elif op == "finish":
+            running = [t for a in apps for t in a.tasks.values()
+                       if t.state == RUNNING]
+            if running:
+                s.task_finished(rng.choice(running).task_id)
+        s.tick()
+        _check_invariants(s)
+
+    # churn over: capacity returns; every queued job must eventually run
+    for name in sorted(c.nodes):
+        if c.nodes[name].state == NODE_DEAD:
+            c.recover_node(name)
+    c.register_node(Node("settle", Resources(cpus=64, gpus=8,
+                                             memory_mb=64000)))
+    for _ in range(300):
+        s.tick()
+        _check_invariants(s)
+        tasks = [t for a in apps for t in a.tasks.values()]
+        for t in tasks:
+            if t.state == RUNNING:
+                s.task_finished(t.task_id)
+        if all(t.state == FINISHED for t in tasks):
+            break
+    stuck = {t.task_id: t.state for a in apps for t in a.tasks.values()
+             if t.state != FINISHED}
+    assert not stuck, f"queued work was stranded by churn: {stuck}"
+    assert len(s.queue) == 0
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_churn_invariants_seeded(seed):
+    _run_churn(seed)
+
+
+@needs_hypothesis
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_churn_invariants_property(seed):
+    _run_churn(seed)
+
+
+def _billing_ratio(spot):
+    c = Cluster([])
+    c.register_node(Node("b0", Resources(cpus=8, gpus=2,
+                                         memory_mb=16000)), spot=spot)
+    s = Scheduler(c)
+    s.submit(App("j", Resources(cpus=1, gpus=2, memory_mb=100), count=1),
+             tenant="t")
+    s.tick()
+    time.sleep(0.03)
+    s.task_finished("j.0")
+    ten = s.queue.tenant("t")
+    assert ten.gpu_seconds > 0
+    return ten.cost_units / ten.gpu_seconds
+
+
+def test_spot_bills_strictly_below_on_demand():
+    """Same workload, same hold: the spot bill is half the on-demand
+    bill per gpu-second (the discounted cost factor), never more."""
+    assert _billing_ratio(spot=True) == pytest.approx(0.5)
+    assert _billing_ratio(spot=False) == pytest.approx(1.0)

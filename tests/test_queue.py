@@ -2,6 +2,7 @@
 quota rejection + quota holds, preemption with checkpoint-aware requeue,
 and the REST queue/tenant surface."""
 import json
+import threading
 import time
 import urllib.error
 import urllib.request
@@ -293,8 +294,11 @@ def test_preempt_running_body_resumes_from_checkpoint():
         time.sleep(0.01)
     assert ckpt["step"] >= 5, "low job never started"
 
+    # the high job holds its GPUs until the main thread has actually
+    # observed the low job PREEMPTED (condition, not a fixed sleep)
+    preempt_seen = threading.Event()
     lcm.submit(JobSpec(job_id="highjob", gpus_per_learner=2,
-                       learner_body=lambda wd, idx: time.sleep(0.3),
+                       learner_body=lambda wd, idx: preempt_seen.wait(5),
                        tenant="bob", priority=10))
     saw_preempted = False
     t0 = time.time()
@@ -302,6 +306,7 @@ def test_preempt_running_body_resumes_from_checkpoint():
         s.tick()
         if lcm.monitor("lowjob") == "PREEMPTED":
             saw_preempted = True
+            preempt_seen.set()
             # tenancy + position persisted in ZK while preempted
             assert (lcm._get("lowjob", "spec") or {}).get(
                 "tenant") == "alice"

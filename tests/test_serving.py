@@ -15,6 +15,7 @@ from repro.configs.registry import get_arch
 from repro.platform.cluster import UserError
 from repro.serving.engine import (EndpointClosed, InferenceEngine,
                                   QueueFull)
+from util_poll import assert_holds_for, wait_until
 
 ARCH = "stablelm-1.6b"
 MAX_SEQ = 32
@@ -136,7 +137,8 @@ def test_deadline_expires_queued_request(cfg):
                           default_max_new=2, endpoint_id="ep-dl")
     p = np.arange(4, dtype=np.int32) + 1
     req = eng.submit(p, deadline_s=0.01)
-    time.sleep(0.05)                     # deadline passes while queued
+    # deadline passes while queued (poll the actual expiry condition)
+    assert wait_until(lambda: time.time() > req.deadline, timeout=5)
     eng.start(None)
     t = threading.Thread(target=eng.run, daemon=True)
     t.start()
@@ -262,8 +264,8 @@ def test_endpoint_pause_resume(core):
     core.predict(eid, [1, 2, 3], max_new=2)        # warm the jits
     core.pause_training(eid)
     req = core.endpoints[eid].engine.submit([4, 5, 6], max_new=2)
-    time.sleep(0.3)
-    assert not req.done.is_set()                   # held by the pause
+    assert_holds_for(lambda: not req.done.is_set(),
+                     desc="paused endpoint must hold the request")
     core.resume_training(eid)
     assert req.wait(60) and req.status == "DONE"
     core.stop_endpoint(eid)

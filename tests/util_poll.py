@@ -1,0 +1,26 @@
+"""Condition polling for tests — replaces fixed time.sleep() waits.
+
+`wait_until` polls a predicate until it holds (returning True) or the
+deadline passes (returning False); `assert_holds_for` checks a condition
+stays true over a short window by polling, instead of a blind sleep
+followed by a single assert.
+"""
+import time
+
+
+def wait_until(cond, timeout=10.0, interval=0.01, desc="condition"):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def assert_holds_for(cond, duration=0.3, interval=0.02, desc="condition"):
+    """Assert `cond()` stays true for `duration` seconds (polled)."""
+    deadline = time.time() + duration
+    while time.time() < deadline:
+        assert cond(), f"{desc} violated before {duration}s elapsed"
+        time.sleep(interval)
+    assert cond(), f"{desc} violated at end of window"
