@@ -34,6 +34,15 @@ spawns a subprocess with forced host devices, mirroring the dry-run.
 Pass bench-name substrings as argv to run a subset, e.g.
 ``python benchmarks/run.py backends`` or
 ``python benchmarks/run.py ps-dataplane``.
+
+``python benchmarks/run.py gate`` is the perf regression gate: it
+re-runs the three trajectory benches (backends, ps_dataplane, serving)
+into a temp dir and compares every rate metric against the committed
+BENCH_*.json baselines with a wide tolerance band
+(``GATE_TOLERANCE``, default 0.5 — container speed varies several-fold
+between runs, so the gate catches collapses, not noise). Exit 1 iff a
+metric regresses; the final ``GATE {...}`` line is machine-readable.
+``GATE_BENCHES`` subsets the gated files.
 """
 import json
 import subprocess
@@ -322,10 +331,14 @@ def bench_rest_api():
 def bench_backends():
     """Backend trajectory: the same smoke manifest trained through both
     execution backends (runtime/backend.py); emits BENCH_backends.json
-    at the repo root with steps/s and time-to-first-checkpoint."""
+    at the repo root with steps/s and time-to-first-checkpoint
+    (``BACKENDS_OUT`` redirects it, e.g. for the perf gate)."""
+    import os
     import tempfile
 
     from repro.service.core import DLaaSCore
+    out_path = Path(os.environ.get("BACKENDS_OUT",
+                                   ROOT / "BENCH_backends.json"))
     MAN = ("name: bench-backends\nlearners: 1\ngpus: 1\nsteps: 30\n"
            "checkpoint_every: 10\nlr: 0.1\noptimizer: sgd\nseed: 0\n"
            "batch_docs: 4\n"
@@ -360,7 +373,7 @@ def bench_backends():
                  f"final_loss={row['final_loss']}")
         finally:
             core.close()
-    (ROOT / "BENCH_backends.json").write_text(
+    out_path.write_text(
         json.dumps({"manifest": "repro-lm/stablelm-1.6b smoke, 30 steps",
                     "note": ("both backends measured in one process on "
                              "the same machine — compare within a file, "
@@ -571,6 +584,135 @@ def bench_roofline_table():
          f"cells={len(hlos)};worst={worst[0]}:{worst[1]}")
 
 
+# ---------------------------------------------------------------------------
+# perf regression gate — compare fresh runs of the trajectory benches
+# against the committed BENCH_*.json baselines.
+
+GATE_FILES = {
+    "backends": "BENCH_backends.json",
+    "ps_dataplane": "BENCH_ps_dataplane.json",
+    "serving": "BENCH_serving.json",
+}
+GATE_OUT_ENV = {
+    "backends": "BACKENDS_OUT",
+    "ps_dataplane": "PS_DATAPLANE_OUT",
+    "serving": "SERVING_OUT",
+}
+
+
+def gate_metrics(doc):
+    """Flatten one BENCH_*.json into its higher-is-better rate metrics:
+    ``backends.*.steps_per_s``, ``modes.*.{steps_per_s,
+    compression_ratio}``, ``loads.*.req_per_s``."""
+    out = {}
+    for b, row in (doc.get("backends") or {}).items():
+        out[f"backends.{b}.steps_per_s"] = row.get("steps_per_s")
+    for m, row in (doc.get("modes") or {}).items():
+        out[f"modes.{m}.steps_per_s"] = row.get("steps_per_s")
+        out[f"modes.{m}.compression_ratio"] = row.get("compression_ratio")
+    for ld, row in (doc.get("loads") or {}).items():
+        out[f"loads.{ld}.req_per_s"] = row.get("req_per_s")
+    return {k: v for k, v in out.items() if v}
+
+
+def compare(baseline, fresh, tolerance):
+    """Pure gate verdict for one bench file. Every rate metric present
+    in ``baseline`` must be matched by ``fresh`` at
+    ``fresh >= tolerance * baseline`` (all metrics are higher-is-
+    better). The tolerance band is deliberately wide by default: the
+    baselines' own notes warn that container speed varies several-fold
+    between runs, so the gate catches collapses (a kernel accidentally
+    falling off its tuned path), not single-digit-percent noise.
+
+    Returns ``{"verdict": "PASS"|"REGRESS"|"MISSING_BASELINE",
+    "tolerance": ..., "checks": [{metric, baseline, fresh, ratio,
+    ok}, ...]}``."""
+    if not baseline:
+        return {"verdict": "MISSING_BASELINE", "tolerance": tolerance,
+                "checks": []}
+    base_m, fresh_m = gate_metrics(baseline), gate_metrics(fresh or {})
+    checks, regressed = [], False
+    for k, bv in sorted(base_m.items()):
+        fv = fresh_m.get(k)
+        if fv is None:
+            checks.append({"metric": k, "baseline": bv, "fresh": None,
+                           "ok": False})
+            regressed = True
+            continue
+        ok = fv >= tolerance * bv
+        checks.append({"metric": k, "baseline": bv, "fresh": fv,
+                       "ratio": round(fv / bv, 3), "ok": ok})
+        regressed = regressed or not ok
+    return {"verdict": "REGRESS" if regressed else "PASS",
+            "tolerance": tolerance, "checks": checks}
+
+
+def run_gate(kinds=None) -> int:
+    """``python benchmarks/run.py gate [kinds...]``: re-run the
+    trajectory benches into a temp dir and compare each against its
+    committed baseline. ``GATE_TOLERANCE`` (default 0.5: fresh must
+    reach half the baseline rate) widens/narrows the band;
+    ``GATE_BENCHES`` subsets the files. Prints per-check lines plus a
+    final machine-readable ``GATE {...}`` JSON line; exit 1 iff any
+    file regresses (a missing baseline is advisory, not fatal)."""
+    import os
+    import tempfile
+    tol = float(os.environ.get("GATE_TOLERANCE", "0.5"))
+    kinds = [k.replace("-", "_") for k in
+             (kinds or os.environ.get(
+                 "GATE_BENCHES", "backends,ps_dataplane,serving"
+             ).split(","))]
+    bad = [k for k in kinds if k not in GATE_FILES]
+    if bad:
+        print(f"gate: unknown bench kind(s) {bad}; "
+              f"choose from {sorted(GATE_FILES)}", file=sys.stderr)
+        return 2
+    benches = {"backends": bench_backends,
+               "ps_dataplane": bench_ps_dataplane,
+               "serving": bench_serving}
+    tmp = Path(tempfile.mkdtemp(prefix="dlaas_gate_"))
+    report = {"tolerance": tol, "files": {}}
+    verdict = "PASS"
+    print("name,us_per_call,derived")
+    for kind in kinds:
+        base_path = ROOT / GATE_FILES[kind]
+        baseline = (json.loads(base_path.read_text())
+                    if base_path.exists() else None)
+        fresh_path = tmp / GATE_FILES[kind]
+        prev = os.environ.get(GATE_OUT_ENV[kind])
+        os.environ[GATE_OUT_ENV[kind]] = str(fresh_path)
+        try:
+            benches[kind]()
+        except Exception as e:          # fresh run died -> all checks fail
+            print(f"gate[{kind}] bench error: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+        finally:
+            if prev is None:
+                os.environ.pop(GATE_OUT_ENV[kind], None)
+            else:
+                os.environ[GATE_OUT_ENV[kind]] = prev
+        fresh = (json.loads(fresh_path.read_text())
+                 if fresh_path.exists() else None)
+        res = compare(baseline, fresh, tol)
+        report["files"][kind] = res
+        if res["verdict"] == "REGRESS":
+            verdict = "REGRESS"
+        elif res["verdict"] == "MISSING_BASELINE" and verdict == "PASS":
+            verdict = "MISSING_BASELINE"
+        for c in res["checks"]:
+            mark = "ok" if c["ok"] else "REGRESS"
+            print(f"gate[{kind}] {c['metric']}: "
+                  f"{c['fresh']} vs {c['baseline']} "
+                  f"(ratio={c.get('ratio')}, need>={tol}) {mark}",
+                  flush=True)
+        if res["verdict"] == "MISSING_BASELINE":
+            print(f"gate[{kind}] MISSING_BASELINE: "
+                  f"commit {GATE_FILES[kind]} first", flush=True)
+    report["verdict"] = verdict
+    print("GATE " + json.dumps(report), flush=True)
+    return 1 if verdict == "REGRESS" else 0
+
+
 def main(only=None) -> None:
     benches = [
         bench_software_ps, bench_solvers, bench_cursor,
@@ -592,4 +734,6 @@ def main(only=None) -> None:
 
 
 if __name__ == "__main__":
+    if sys.argv[1:2] == ["gate"]:
+        sys.exit(run_gate(sys.argv[2:] or None))
     main(sys.argv[1:])

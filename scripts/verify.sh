@@ -113,6 +113,17 @@ finally:
     core.close()
 EOF
 
+echo "== perf regression gate: fresh trajectory benches vs committed" \
+     "BENCH_*.json (tolerance GATE_TOLERANCE, default 0.5) =="
+# re-runs the backends/ps-dataplane/serving benches into a temp dir and
+# requires every rate metric to reach GATE_TOLERANCE x its committed
+# baseline; exit 1 on regression. The band is wide on purpose (container
+# speed varies several-fold) — override with e.g. GATE_TOLERANCE=0.25
+# on very slow CI hosts, or GATE_BENCHES=ps_dataplane to subset.
+GATE_TOLERANCE="${GATE_TOLERANCE:-0.5}" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/run.py gate
+
 echo "== backend-parity + manifest test groups =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_backends.py tests/test_manifest.py

@@ -111,16 +111,20 @@ class Cost:
             self.coll[k] = self.coll.get(k, 0.0) + v * mult
 
 
-def _split_operands(s: str) -> List[str]:
-    """Operand names from the call-args text (up to the closing paren)."""
+def _operand_frags(s: str) -> List[str]:
+    """Raw operand fragments from the call-args text (up to the closing
+    paren). Newer XLA annotates operands with their full type, e.g.
+    ``dot(f32[8,16]{1,0} %Arg_0.1, f32[16,4]{1,0} %Arg_1.2)`` — the
+    commas inside ``[dims]`` and ``{layout}`` must not split, so depth is
+    tracked across all three bracket kinds, not just parens."""
     depth = 0
     out = []
     cur = []
     for ch in s:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 break
             depth -= 1
         if ch == "," and depth == 0:
@@ -129,8 +133,13 @@ def _split_operands(s: str) -> List[str]:
         else:
             cur.append(ch)
     out.append("".join(cur))
+    return out
+
+
+def _split_operands(s: str) -> List[str]:
+    """Operand names from the call-args text (up to the closing paren)."""
     names = []
-    for frag in out:
+    for frag in _operand_frags(s):
         m = re.search(r"(%[\w.\-]+)", frag)
         names.append(m.group(1) if m else "")
     return names
@@ -264,9 +273,21 @@ def _dot_flops(comp: Computation, op: Op) -> float:
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
     cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
     lhs = comp.by_name.get(op.operands[0]) if op.operands else None
-    csize = 1
+    shape = None
     if lhs is not None and lhs.out_arrays:
         shape = lhs.out_arrays[0][1]
+    else:
+        # typed-operand form (newer XLA): the lhs annotation carries the
+        # shape inline — parse it instead of the symbol table
+        m2 = re.search(r"\s" + re.escape(op.opcode) + r"\((.*)$", op.line)
+        if m2:
+            frags = _operand_frags(m2.group(1))
+            if frags:
+                _, arrays = _parse_shape(frags[0])
+                if arrays:
+                    shape = arrays[0][1]
+    csize = 1
+    if shape is not None:
         for d in cdims:
             if d < len(shape):
                 csize *= shape[d]

@@ -81,9 +81,17 @@ def make_compressor(block: int = BLOCK, use_tpu: bool = None):
     if use_tpu is None:
         use_tpu = jax.default_backend() == "tpu"
     if use_tpu:
+        from repro.kernels.autotune import tuned_quantize_block
         from repro.kernels.quantize import quantize_ef
 
-        return jax.jit(lambda x, e: quantize_ef(x, e, qblock=block))
+        jfn = jax.jit(lambda x, e, blk: quantize_ef(
+            x, e, qblock=block, block=blk), static_argnums=(2,))
+
+        def compress(x, e):
+            # tuned grid block resolved outside the jit (cached per shape)
+            blk = tuned_quantize_block(int(x.shape[0]), block, x.dtype)
+            return jfn(x, e, blk)
+        return compress
     # one definition of the scheme: drop the wire view (its math is part
     # of the residual anyway, so nothing extra is computed under jit)
     return jax.jit(

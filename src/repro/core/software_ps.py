@@ -177,11 +177,17 @@ class SoftwareParameterServer:
                   b1=self.b1, b2=self.b2, eps=self.eps,
                   momentum=self.momentum, beta=1.0)
         if jax.default_backend() == "tpu":
+            from repro.kernels.autotune import tuned_ps_block
             from repro.kernels.ps_aggregate import ps_aggregate
-            jfn = jax.jit(functools.partial(ps_aggregate, **kw))
+            jfn = jax.jit(functools.partial(ps_aggregate, **kw),
+                          static_argnames=("block",))
 
             def agg(rows, p, m, v, step):
-                pn, mn, vn = jfn(rows, p, m, v, np.float32(step))
+                # tuned block resolved outside the jit (cached per shape)
+                blk = tuned_ps_block(rows.shape[0], rows.shape[1],
+                                     rows.dtype)
+                pn, mn, vn = jfn(rows, p, m, v, np.float32(step),
+                                 block=blk)
                 np.copyto(p, np.asarray(pn))
                 np.copyto(m, np.asarray(mn))
                 np.copyto(v, np.asarray(vn))

@@ -3,14 +3,22 @@
 Each wrapper handles layout folding (model layouts -> kernel layouts),
 dtype plumbing, and the TPU/interpret switch: on a TPU backend the Mosaic
 kernel runs; elsewhere ``interpret=True`` executes the kernel body in
-Python (correctness-equivalent, used by tests and CPU smoke)."""
+Python (correctness-equivalent, used by tests and CPU smoke).
+
+Block sizes default to the autotuner (kernels/autotune.py): the tuned
+choice is resolved *outside* the jit boundary and passed in as a static
+argument, so measurement probes never run mid-trace and the cache makes
+repeat shapes free. Passing an explicit block pins it (tests, parity
+sweeps)."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ps_aggregate as _agg
 from repro.kernels import quantize as _q
@@ -22,10 +30,8 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    block_q: int = 128, block_k: int = 128):
-    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Repeats GQA heads,
-    folds to the kernel layout, unfolds back."""
+def _flash_attention_jit(q, k, v, *, causal: bool, block_q: int,
+                         block_k: int):
     b, s, h, hd = q.shape
     kv = k.shape[2]
     if kv != h:
@@ -36,6 +42,22 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                 block_q=block_q, block_k=block_k,
                                 interpret=not _on_tpu())
     return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None):
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Repeats GQA heads,
+    folds to the kernel layout, unfolds back. Blocks autotune per shape
+    unless pinned."""
+    b, s, h, hd = q.shape
+    if block_q is None or block_k is None:
+        tq, tk = autotune.tuned_flash_blocks(b * h, s, k.shape[1], hd,
+                                             q.dtype)
+        block_q = block_q or tq
+        block_k = block_k or tk
+    return _flash_attention_jit(q, k, v, causal=causal,
+                                block_q=block_q, block_k=block_k)
 
 
 @partial(jax.jit, static_argnames=("chunk",))
@@ -60,20 +82,44 @@ def ssd_scan(x, dt, a_log, b, c, *, chunk: int = 128):
 
 @partial(jax.jit, static_argnames=("solver", "lr", "b1", "b2", "eps",
                                    "momentum", "beta", "block"))
-def ps_aggregate(grads, params, m, v, step, *, solver="adam", lr=1e-3,
-                 b1=0.9, b2=0.999, eps=1e-8, momentum=0.9, beta=0.9,
-                 block=1024):
+def _ps_aggregate_jit(grads, params, m, v, step, *, solver, lr, b1, b2,
+                      eps, momentum, beta, block):
     return _agg.ps_aggregate(grads, params, m, v, step, solver=solver,
                              lr=lr, b1=b1, b2=b2, eps=eps,
                              momentum=momentum, beta=beta, block=block,
                              interpret=not _on_tpu())
 
 
-@jax.jit
-def quantize_ef(x, err):
-    return _q.quantize_ef(x, err, interpret=not _on_tpu())
+def ps_aggregate(grads, params, m, v, step, *, solver="adam", lr=1e-3,
+                 b1=0.9, b2=0.999, eps=1e-8, momentum=0.9, beta=0.9,
+                 block: Optional[int] = None):
+    if block is None:
+        nl, f = grads.shape
+        block = autotune.tuned_ps_block(nl, f, grads.dtype)
+    return _ps_aggregate_jit(grads, params, m, v, step, solver=solver,
+                             lr=lr, b1=b1, b2=b2, eps=eps,
+                             momentum=momentum, beta=beta, block=block)
 
 
-@jax.jit
-def dequantize(q, scales):
-    return _q.dequantize(q, scales, interpret=not _on_tpu())
+@partial(jax.jit, static_argnames=("block",))
+def _quantize_ef_jit(x, err, *, block):
+    return _q.quantize_ef(x, err, block=block, interpret=not _on_tpu())
+
+
+def quantize_ef(x, err, *, block: Optional[int] = None):
+    if block is None:
+        block = autotune.tuned_quantize_block(x.shape[0], _q.QBLOCK,
+                                              x.dtype)
+    return _quantize_ef_jit(x, err, block=block)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _dequantize_jit(q, scales, *, block):
+    return _q.dequantize(q, scales, block=block, interpret=not _on_tpu())
+
+
+def dequantize(q, scales, *, block: Optional[int] = None):
+    if block is None:
+        block = autotune.tuned_quantize_block(q.shape[0], _q.QBLOCK,
+                                              q.dtype)
+    return _dequantize_jit(q, scales, block=block)

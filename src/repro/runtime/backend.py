@@ -172,6 +172,15 @@ class SoftwarePSBackend(ExecutionBackend):
         # plugin is handed to the learner body below — the model is
         # initialized and jitted once per job, not once per layer
         flat0 = plugin.flat_state(jcfg.seed)
+        # roofline estimate of the fused step (status.perf): analyzed on
+        # a background thread after the warm compile settles
+        from repro.analysis.perf import JobPerf
+        perf = JobPerf(spec.job_id, ctx.metrics)
+        if hasattr(plugin, "lowered_hlo"):
+            perf.start_async(
+                lambda: plugin.lowered_hlo(jcfg.batch_docs,
+                                           jcfg.data_cfg),
+                wait_event=getattr(plugin, "_warming", None))
         ps = SoftwareParameterServer(
             flat0, n_shards=ps_shards,
             n_learners=spec.learners,
@@ -207,7 +216,8 @@ class SoftwarePSBackend(ExecutionBackend):
             tenant=spec.tenant, priority=spec.priority,
             results=results, control=control,
             meta={"ps": ps, "framework": fw_name, "steps": jcfg.steps,
-                  "compression": compression, "ps_shards": ps_shards})
+                  "compression": compression, "ps_shards": ps_shards,
+                  "perf": perf})
 
 
 # ---------------------------------------------------------------------------
@@ -254,8 +264,12 @@ class PjitBackend(ExecutionBackend):
                               dataset_size=dspec.n_docs)
         results: Dict = {}
         control = JobControl()
+        from repro.analysis.perf import JobPerf
         meta = {"arch": arch, "policy": fw_cfg.get("policy", "fsdp_tp"),
-                "steps": int(manifest.get("steps", 40)), "elastic": True}
+                "steps": int(manifest.get("steps", 40)), "elastic": True,
+                # the SPMD step is built by the leader at run time, so
+                # the roofline estimate starts there (first incarnation)
+                "perf": JobPerf(spec.job_id, ctx.metrics)}
         state = {"done": threading.Event()}
         body = _make_pjit_body(
             job_id=spec.job_id, cfg=cfg, dspec=dspec, cursor=cursor,
@@ -323,6 +337,14 @@ def _make_pjit_body(*, job_id, cfg, dspec, cursor, ctx, control, results,
                            job_id=job_id)
         tr = Trainer(cfg, dist, OptConfig(name=optimizer, lr=lr), tc,
                      metrics=ctx.metrics).init(seed)
+        perf = meta.get("perf")
+        if perf is not None:
+            zeros = np.zeros((batch_docs, dspec.seq_len), np.int32)
+            batch0 = {"tokens": jnp.asarray(zeros),
+                      "labels": jnp.asarray(zeros)}
+            # idempotent across incarnations (start_async runs once)
+            perf.start_async(lambda: tr._step_fn.lower(
+                tr.params, tr.opt_state, batch0).compile().as_text())
         last = tr.ckpt.latest_valid()
         if last is not None:
             extra = tr.restore(last)

@@ -140,6 +140,17 @@ class LMPlugin:
         threading.Thread(target=run, daemon=True,
                          name="plugin-warm").start()
 
+    def lowered_hlo(self, batch_docs: int, data_cfg: Dict) -> str:
+        """Compiled HLO text of the fused flat train step — feeds the
+        status.perf roofline estimate. Called after ``warm_async`` so
+        the second lowering rides the persistent compilation cache."""
+        self._build_flat()
+        spec = self.dataset_spec(data_cfg)
+        tok = jax.ShapeDtypeStruct((batch_docs, spec.seq_len), jnp.int32)
+        flat = jax.ShapeDtypeStruct((self.flat_size,), jnp.float32)
+        return self._flat_lg.lower(
+            flat, {"tokens": tok, "labels": tok}).compile().as_text()
+
     def flat_state(self, seed: int) -> np.ndarray:
         """Initial weights as one flat f32 vector — the learner's
         canonical state on the PS push/pull path. Init, unflatten,
@@ -234,6 +245,16 @@ class MLPPlugin:
         loss, acc, g = self._flat_lg(flat, x)
         self.last_acc = float(acc)
         return loss, g
+
+    def lowered_hlo(self, batch_docs: int, data_cfg: Dict) -> str:
+        """Compiled HLO text of the flat step for status.perf."""
+        if self._flat_lg is None:
+            self.flat_state(0)
+        b = _synthetic_features(np.zeros((batch_docs, 2), np.int64),
+                                self.d_in, self.n_classes)
+        flat = jax.ShapeDtypeStruct((self._flat_cache[1].size,),
+                                    jnp.float32)
+        return self._flat_lg.lower(flat, b).compile().as_text()
 
     def dataset_spec(self, data_cfg: Dict) -> DatasetSpec:
         return DatasetSpec(n_docs=data_cfg.get("n_docs", 2048),

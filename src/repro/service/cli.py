@@ -10,6 +10,8 @@ the REST API').
                                     --ps-shards N]
   dlaas train list
   dlaas train status  --id <tid>
+  dlaas train perf    --id <tid>            # roofline: bound, attainable
+                                            # vs measured rate
   dlaas train logs    --id <tid> [--follow]
   dlaas train delete  --id <tid>
   dlaas train download --id <tid> --out model.npy
@@ -86,7 +88,8 @@ def main(argv=None):
                    help="software-PS shard count (default: manifest's "
                         "framework.ps_shards, else 4)")
     tsub.add_parser("list")
-    for name in ("status", "logs", "delete", "download", "rescale"):
+    for name in ("status", "logs", "delete", "download", "rescale",
+                 "perf"):
         p = tsub.add_parser(name)
         p.add_argument("--id", required=True)
         if name == "download":
@@ -185,6 +188,9 @@ def main(argv=None):
             out = _req(f"{base}/v1/trainings/{args.id}/logs",
                        token=args.token)
             print("\n".join(out.get("logs", [])))
+    elif args.cmd == "train" and args.sub == "perf":
+        print(json.dumps(_req(f"{base}/v1/trainings/{args.id}/perf",
+                              token=args.token), indent=1))
     elif args.cmd == "train" and args.sub == "rescale":
         print(json.dumps(_req(f"{base}/v1/trainings/{args.id}/rescale",
                               "POST", {}, args.token)))

@@ -105,6 +105,19 @@ class DLaaSCore:
         self._ticker.start()
         # metering (API layer concern, kept with the core for simplicity)
         self.usage: Dict[str, int] = {}
+        # kernel-grid degradations surface as a platform counter
+        # (kernels/grid.py warns once per signature; the metric counts
+        # every occurrence). Weakly bound: cores come and go in tests.
+        import weakref
+
+        from repro.kernels import grid as _grid
+        wself = weakref.ref(self)
+
+        def _small_block(f, requested, chosen):
+            c = wself()
+            if c is not None:
+                c.metrics.incr("platform", "kernels_small_block_total")
+        _grid.on_small_block(_small_block)
 
     def close(self):
         self._stop.set()
@@ -391,9 +404,32 @@ class DLaaSCore:
                         plan.meta["ps"] = None
                 elif "data_plane_final" in plan.meta:
                     out["data_plane"] = plan.meta["data_plane_final"]
+            perf = plan.meta.get("perf")
+            if perf is not None:
+                from repro.analysis.perf import measured_rate_from_metrics
+                out["perf"] = perf.snapshot(measured_rate_from_metrics(
+                    self.metrics, job_id))
         if state in ("QUEUED", "PREEMPTED"):
             out["queue"] = self.lcm.queue_info(job_id)
         return out
+
+    def training_perf(self, job_id: str) -> Dict:
+        """The roofline estimate alone (REST: GET
+        /v1/trainings/<id>/perf; CLI: ``train perf``): the analyzed
+        bound, attainable rate, live measured rate and the
+        pct-of-attainable summary."""
+        with self._lock:
+            if job_id not in self.trainings:
+                raise KeyError(job_id)
+            rec = self.trainings.get(job_id, {})
+        plan = rec.get("plan")
+        perf = plan.meta.get("perf") if plan is not None else None
+        if perf is None:
+            return {"training_id": job_id, "perf": {"state": "unavailable"}}
+        from repro.analysis.perf import measured_rate_from_metrics
+        return {"training_id": job_id,
+                "perf": perf.snapshot(measured_rate_from_metrics(
+                    self.metrics, job_id))}
 
     def terminate_training(self, job_id: str):
         self.lcm.kill(job_id)

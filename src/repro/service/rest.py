@@ -44,6 +44,8 @@ Endpoints (v1):
   GET    /v1/trainings/<id>/logs         collected logs
   GET    /v1/trainings/<id>/logs/stream  chunked live stream (websocket
                                          analogue of the visualization API)
+  GET    /v1/trainings/<id>/perf         roofline estimate: bound,
+                                         attainable vs measured rate
   GET    /v1/trainings/<id>/metrics      common JSON-list metric format
   GET    /v1/trainings/<id>/model        trained weights (binary)
   GET    /v1/cluster                     node lifecycle states, transition
@@ -216,6 +218,8 @@ class _Handler(BaseHTTPRequestHandler):
             if len(parts) == 4 and parts[3] == "logs":
                 return self._json(
                     {"logs": self.core.training_logs(parts[2])})
+            if len(parts) == 4 and parts[3] == "perf":
+                return self._json(self.core.training_perf(parts[2]))
             if len(parts) == 5 and parts[3] == "logs" \
                     and parts[4] == "stream":
                 return self._stream_logs(parts[2])

@@ -212,4 +212,6 @@ class ModelEndpoint:
             "max_queue": self.engine.max_queue,
             "stats": (self.stats_final if self.stats_final is not None
                       else self.engine.stats()),
+            # roofline estimate of the decode step + live measured rate
+            "perf": self.engine.perf.snapshot(self.engine.decode_rate()),
         }

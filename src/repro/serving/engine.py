@@ -133,6 +133,13 @@ class InferenceEngine:
             maxlen=4096)
         self._decode_steps = 0
         self._occupied_slot_steps = 0
+        self._first_decode_t: Optional[float] = None
+        self._last_decode_t: Optional[float] = None
+        # roofline estimate of the decode step (status.perf), analyzed
+        # in the background once the jits are built
+        from repro.analysis.perf import JobPerf
+        self.perf = JobPerf(endpoint_id or "endpoint", metrics,
+                            unit="decode_step")
 
     # ---- weight I/O -------------------------------------------------------
     def _ensure_flat_io(self):
@@ -190,6 +197,15 @@ class InferenceEngine:
             self._cache = self._empty_cache()
             self._released = False
             self._ready.set()
+        # snapshot shapes eagerly (the live cache is donated every
+        # decode step; ShapeDtypeStructs stay valid), lower lazily
+        sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        p0 = jax.tree.map(sds, self.params)
+        c0 = jax.tree.map(sds, self._cache)
+        t0 = jax.ShapeDtypeStruct((self.capacity, 1, 1), jnp.int32)
+        dec = self._decode
+        self.perf.start_async(
+            lambda: dec.lower(p0, c0, t0).compile().as_text())
 
     @property
     def ready(self) -> bool:
@@ -430,6 +446,9 @@ class InferenceEngine:
                 self._maybe_retire(s, r, now)
             self._decode_steps += 1
             self._occupied_slot_steps += live
+            if self._first_decode_t is None:
+                self._first_decode_t = now
+            self._last_decode_t = now
         self._gauge("batch_occupancy", live / self.capacity,
                     step=self._decode_steps)
         return live
@@ -509,6 +528,16 @@ class InferenceEngine:
                       file=sys.stderr)
 
     # ---- observability ----------------------------------------------------
+    def decode_rate(self) -> Optional[float]:
+        """Measured decode steps/s over the serve so far (the measured
+        term of the status.perf roofline fraction)."""
+        with self._lock:
+            steps = self._decode_steps
+            t0, t1 = self._first_decode_t, self._last_decode_t
+        if steps >= 2 and t0 is not None and t1 is not None and t1 > t0:
+            return (steps - 1) / (t1 - t0)
+        return None
+
     def stats(self) -> Dict:
         """Counters + latency percentiles + occupancy — what endpoint
         status exposes and the serving benchmark samples."""
