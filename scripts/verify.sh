@@ -266,5 +266,127 @@ serving_drill()
 print("chaos drill OK")
 EOF
 
+echo "== storage hygiene: production object-store I/O must go through" \
+     "StorageManager's with_backoff wrappers, never raw Store methods =="
+python - <<'EOF'
+import pathlib
+import re
+import sys
+
+# direct store calls skip the exponential-backoff retry the paper
+# requires for Object Store access; everything in src/ must route
+# through StorageManager.download/upload (platform/storage.py)
+pat = re.compile(
+    r"(\bget_store\s*\(|\bstore\.(put|get|list|delete|exists)\s*\(|"
+    r"\.stores\[)")
+bad = []
+for p in sorted(pathlib.Path("src").rglob("*.py")):
+    if p.as_posix() == "src/repro/platform/storage.py":
+        continue
+    text = p.read_text()
+    for m in pat.finditer(text):
+        line = text[: m.start()].count("\n") + 1
+        bad.append(f"{p}:{line}: {m.group(0)}")
+if bad:
+    print("raw object-store access outside the backoff wrapper:")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print("storage backoff-path check OK")
+EOF
+
+echo "== crash-recovery drill: hard-kill (SIGKILL) a core subprocess" \
+     "mid-training, recover a fresh core on the same workdir =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+WORKDIR = tempfile.mkdtemp(prefix="verify_crash_")
+MARKER = pathlib.Path(WORKDIR) / "marker.json"
+
+# -- phase 1: a real OS process builds state, then is SIGKILLed --------
+CHILD = r'''
+import json, pathlib, sys, time
+from repro.service.core import DLaaSCore
+
+workdir = sys.argv[1]
+MANIFEST = ("name: crash-drill\nlearners: 1\ngpus: 1\nsteps: 2000\n"
+            "checkpoint_every: 100\nframework:\n  name: repro-mlp\n"
+            "  d_in: 16\n  n_classes: 4\n")
+core = DLaaSCore(workdir, tick_interval=0.005)
+eid = core.deploy_endpoint(arch="stablelm-1.6b", max_new=2,
+                           idempotency_key="drill-ep")["endpoint_id"]
+t0 = time.time()
+while core.endpoint_status(eid)["state"] != "READY":
+    if time.time() - t0 > 300:
+        raise SystemExit("child: endpoint never READY")
+    time.sleep(0.1)
+pre = core.predict(eid, [1, 2, 3], max_new=2)["tokens"]
+mid = core.deploy_model(MANIFEST)["model_id"]
+tid = core.create_training(mid, user="alice",
+                           idempotency_key="drill-sub")["training_id"]
+t0 = time.time()
+while not core.metrics.checkpoints(tid):
+    if time.time() - t0 > 300:
+        raise SystemExit("child: no checkpoint landed")
+    time.sleep(0.05)
+core.pause_training(tid)     # hold mid-flight so the kill is mid-job
+pathlib.Path(workdir, "marker.json").write_text(json.dumps(
+    {"tid": tid, "eid": eid, "mid": mid, "pre_tokens": pre}))
+time.sleep(600)              # parent SIGKILLs us here
+'''
+child = subprocess.Popen([sys.executable, "-c", CHILD, WORKDIR])
+t0 = time.time()
+while not MARKER.exists():
+    if child.poll() is not None:
+        raise SystemExit("crash drill FAILED: child died before marker "
+                         f"(rc={child.returncode})")
+    if time.time() - t0 > 600:
+        child.kill()
+        raise SystemExit("crash drill FAILED: child never wrote marker")
+    time.sleep(0.1)
+ids = json.loads(MARKER.read_text())
+os.kill(child.pid, signal.SIGKILL)       # no shutdown hook runs
+child.wait()
+
+# -- phase 2: fresh core, same workdir — replay + recover --------------
+from repro.service.core import DLaaSCore
+
+core = DLaaSCore(WORKDIR, tick_interval=0.005)
+try:
+    rep = core.recovery_report()
+    tid, eid = ids["tid"], ids["eid"]
+    assert rep["recovered"], rep
+    if tid not in rep["trainings"]["resumed"] + rep["trainings"]["requeued"]:
+        raise SystemExit(f"crash drill FAILED: {tid} not relaunched: {rep}")
+    if eid not in rep["endpoints"]["redeployed"]:
+        raise SystemExit(f"crash drill FAILED: {eid} not redeployed: {rep}")
+    # replayed Idempotency-Key returns the ORIGINAL job, no duplicate
+    again = core.create_training(ids["mid"], user="alice",
+                                 idempotency_key="drill-sub")
+    assert again["training_id"] == tid, again
+    if core.wait_for(tid, timeout=600) != "COMPLETED":
+        raise SystemExit("crash drill FAILED: training did not complete "
+                         f"after recovery: {core.lcm.job_state(tid)}")
+    t0 = time.time()
+    while core.endpoint_status(eid)["state"] != "READY":
+        if time.time() - t0 > 300:
+            raise SystemExit("crash drill FAILED: endpoint not READY "
+                             "after recovery")
+        time.sleep(0.1)
+    post = core.predict(eid, [1, 2, 3], max_new=2)["tokens"]
+    assert post == ids["pre_tokens"], (post, ids["pre_tokens"])
+    print(f"crash-recovery drill OK: journal {rep['journal']}, "
+          f"{tid} completed after SIGKILL, {eid} serving again, "
+          f"idempotent replay returned the original ids")
+finally:
+    core.close()
+EOF
+
 echo "== tier-1 tests (-rs: every skip must name its reason) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -rs "$@"

@@ -4,13 +4,19 @@ state in Object Store. After a failure, recovered learners can start the
 learning process from a checkpoint, instead of from the beginning").
 
 Properties a 1000-node deployment needs, implemented here:
-  * atomic publish: write to ``<dir>.tmp``, fsync-free rename — a crash
-    mid-write never yields a half-visible checkpoint;
+  * atomic publish: write to ``<dir>.tmp``, rename — a crash mid-write
+    never yields a half-visible checkpoint. Rename alone survives a
+    process crash; set ``DLAAS_FSYNC=1`` to also fsync every leaf and
+    the directory entry for power-loss durability;
   * integrity: per-leaf crc32 in the manifest, verified on restore —
     ``latest_valid`` skips corrupt checkpoints and falls back;
   * async save: serialization happens on a background thread so the train
     loop keeps stepping (one outstanding save; joins before the next);
   * keep-last-k GC;
+  * optional object-store mirror: pass ``mirror=(StorageManager, store,
+    prefix)`` and every published checkpoint is also uploaded through
+    the manager's ``with_backoff`` path (paper: learners "checkpoint
+    their state in Object Store");
   * elastic restore: arrays are re-laid-out onto the CURRENT mesh via
     ``jax.device_put`` with the target sharding, so a job checkpointed on
     N learners restores onto M (resharding = elastic scaling path).
@@ -23,15 +29,18 @@ from __future__ import annotations
 
 import io
 import json
+import os
 import shutil
 import threading
 import time
 import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.platform.journal import fsync_enabled
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -45,11 +54,15 @@ def _flatten(tree) -> Dict[str, Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
-                 async_save: bool = True):
+                 async_save: bool = True,
+                 mirror: Optional[Tuple] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
+        self.fsync = fsync_enabled()
+        # (StorageManager, store_id, container-prefix) or None
+        self.mirror = mirror
         self._thread: Optional[threading.Thread] = None
 
     # ---- save -----------------------------------------------------------
@@ -84,6 +97,7 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         crcs = {}
+        blobs = {}
         for k, v in host.items():
             buf = io.BytesIO()
             np.save(buf, v, allow_pickle=False)
@@ -91,11 +105,36 @@ class CheckpointManager:
             crcs[k] = zlib.crc32(data)
             fp = tmp / (k.replace("/", "__") + ".npy")
             fp.write_bytes(data)
+            blobs[k.replace("/", "__") + ".npy"] = data
         meta["crcs"] = crcs
-        (tmp / "manifest.json").write_text(json.dumps(meta))
+        manifest = json.dumps(meta)
+        (tmp / "manifest.json").write_text(manifest)
+        if self.fsync:
+            for f in tmp.iterdir():
+                fd = os.open(f, os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                      # atomic publish
+        if self.fsync:
+            # fsync the parent dir so the rename itself is durable
+            fd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
+        if self.mirror is not None:
+            # paper: learners "checkpoint their state in Object Store" —
+            # every put goes through StorageManager.upload's with_backoff
+            storage, store_id, prefix = self.mirror
+            container = f"{prefix}/step_{step:010d}"
+            for name, data in blobs.items():
+                storage.upload(store_id, container, name, data)
+            storage.upload(store_id, container, "manifest.json",
+                           manifest.encode())
         self._gc()
 
     def _gc(self):

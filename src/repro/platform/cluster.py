@@ -420,6 +420,17 @@ class Scheduler:
         with self._lock:
             return self.queue.status()
 
+    def tenant_snapshots(self) -> Dict[str, Dict]:
+        """Per-tenant snapshot dicts (the durable-billing mirror reads
+        these every tick and persists the ones that changed)."""
+        with self._lock:
+            return {n: t.snapshot() for n, t in self.queue.tenants.items()}
+
+    def restore_tenant(self, name: str, snap: Dict):
+        """Rehydrate one tenant from a persisted snapshot (recovery)."""
+        with self._lock:
+            return self.queue.restore_tenant(name, snap)
+
     def queue_position(self, app_id: str) -> Optional[int]:
         with self._lock:
             return self.queue.position(app_id)

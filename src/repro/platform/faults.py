@@ -23,15 +23,15 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
-KILL, DRAIN, PARTITION, DELAY, RECOVER = (
-    "kill", "drain", "partition", "delay", "recover")
+KILL, DRAIN, PARTITION, DELAY, RECOVER, CRASH_CORE = (
+    "kill", "drain", "partition", "delay", "recover", "crash_core")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     kind: str                       # kill | drain | partition | delay |
-                                    # recover
-    node: str
+                                    # recover | crash_core
+    node: str                       # crash_core: ignored (use "")
     at_tick: Optional[int] = None   # cluster clock trigger
     at_step: Optional[int] = None   # job-progress trigger (needs job_id)
     job_id: Optional[str] = None
@@ -40,7 +40,8 @@ class FaultEvent:
     def describe(self) -> str:
         trig = (f"tick>={self.at_tick}" if self.at_tick is not None
                 else f"{self.job_id}.step>={self.at_step}")
-        return f"{self.kind} {self.node} @ {trig}"
+        tgt = self.node or "core"
+        return f"{self.kind} {tgt} @ {trig}"
 
 
 class FaultSchedule:
@@ -77,10 +78,11 @@ class FaultInjector:
     training progress on every run."""
 
     def __init__(self, schedule: FaultSchedule, lcm=None,
-                 metrics=None):
+                 metrics=None, core=None):
         self.schedule = schedule
         self.lcm = lcm
         self.metrics = metrics
+        self.core = core            # crash_core target (DLaaSCore)
         self._pending: List[FaultEvent] = list(schedule)
         self.fired: List[Dict] = []
 
@@ -112,6 +114,14 @@ class FaultInjector:
         return self.lcm.max_step(job_id)
 
     def _fire(self, ev: FaultEvent, cluster) -> bool:
+        if ev.kind == CRASH_CORE:
+            # SIGKILL-equivalent for the control plane itself: detach the
+            # journal and abandon the process state. Nothing graceful
+            # happens — recovery is the NEXT core's problem.
+            if self.core is None:
+                return False
+            self.core.crash()
+            return True
         if ev.node not in cluster.nodes:
             return False
         if ev.kind == KILL:

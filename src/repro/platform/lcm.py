@@ -28,7 +28,7 @@ from repro.platform.cluster import (App, Resources, Scheduler, RUNNING,
                                     PREEMPTED as TASK_PREEMPTED,
                                     STAGING as TASK_STAGING)
 from repro.platform.watchdog import JOB_DONE, JOB_FAILED
-from repro.platform.zookeeper import NoNodeError, ZooKeeper
+from repro.platform.zookeeper import NoNodeError, ZooKeeper, zk_retry
 
 # job states (PREEMPTED is non-terminal: the scheduler requeues the
 # job's tasks and they resume from the last checkpoint — bounding the
@@ -182,14 +182,20 @@ class LifecycleManager:
     def _set(self, job_id: str, key: str, value: Dict):
         path = f"{self._jpath(job_id)}/{key}"
         data = json.dumps(value).encode()
-        if self.zk.exists(path):
-            self.zk.set(path, data)
-        else:
-            self.zk.create(path, data, makepath=True)
+
+        def write():
+            if self.zk.exists(path):
+                self.zk.set(path, data)
+            else:
+                self.zk.create(path, data, makepath=True)
+        # monitor()/submit run on the tick thread: a brief quorum outage
+        # (kill_replica chaos) must not crash the control loop
+        zk_retry(write)
 
     def _get(self, job_id: str, key: str) -> Optional[Dict]:
         try:
-            data, _ = self.zk.get(f"{self._jpath(job_id)}/{key}")
+            data, _ = zk_retry(
+                lambda: self.zk.get(f"{self._jpath(job_id)}/{key}"))
             return json.loads(data or b"{}")
         except NoNodeError:
             return None
@@ -241,7 +247,7 @@ class LifecycleManager:
 
     def jobs(self) -> List[str]:
         try:
-            return self.zk.children("/dlaas/jobs")
+            return zk_retry(lambda: self.zk.children("/dlaas/jobs"))
         except NoNodeError:
             return []
 
@@ -299,18 +305,20 @@ class LifecycleManager:
         out = {}
         base = f"{self._jpath(job_id)}/members"
         try:
-            members = self.zk.children(base)
+            members = zk_retry(lambda: self.zk.children(base))
         except NoNodeError:
             return out
         for m in members:
             rec: Dict = {"alive": self.zk.exists(f"{base}/{m}/alive")}
             try:
-                data, _ = self.zk.get(f"{base}/{m}/status")
+                data, _ = zk_retry(
+                    lambda m=m: self.zk.get(f"{base}/{m}/status"))
                 rec.update(json.loads(data))
             except NoNodeError:
                 pass
             try:
-                data, _ = self.zk.get(f"{base}/{m}/heartbeat")
+                data, _ = zk_retry(
+                    lambda m=m: self.zk.get(f"{base}/{m}/heartbeat"))
                 rec["heartbeat"] = json.loads(data)
             except NoNodeError:
                 pass
@@ -414,6 +422,22 @@ class LifecycleManager:
                 self._rm_tree(f"{base}/{m}")
         except NoNodeError:
             pass
+
+    def clear_runtime_state(self, job_id: str):
+        """Crash-recovery prep: drop everything a relaunched incarnation
+        must rebuild itself — member status/heartbeat/log znodes, the
+        persisted queue position, and the replayed data cursor. The
+        cursor is the subtle one: ``GlobalCursor.restore`` only moves
+        FORWARD, so a replayed cursor ahead of the last checkpoint would
+        make the resumed run skip data an uninterrupted run would see
+        (breaking loss parity). The checkpoint's (epoch, offset) is the
+        truth; the relaunch re-seeds the cursor from it."""
+        self.gc(job_id)
+        for key in ("queue", "progress", "cursor"):
+            try:
+                self.zk.delete(f"{self._jpath(job_id)}/{key}")
+            except NoNodeError:
+                pass
 
     def _rm_tree(self, path: str):
         try:

@@ -126,6 +126,27 @@ class FairShareQueue:
                            else base.memory_mb))
         return t
 
+    def restore_tenant(self, name: str, snap: Dict) -> Tenant:
+        """Rehydrate a tenant from a persisted ``snapshot()`` dict after
+        a control-plane crash. Billing (gpu_seconds/cost_units) and
+        fair-share standing (deficit, placements, preemptions) carry
+        over; ``in_use`` is deliberately zeroed — nothing is placed yet
+        in the recovered process, and relaunched jobs re-charge as the
+        scheduler places them."""
+        t = self.tenant(name)
+        t.weight = float(snap.get("weight", t.weight))
+        q = snap.get("quota")
+        if q is not None:
+            t.quota = Resources(cpus=q["cpus"], gpus=q["gpus"],
+                                memory_mb=q["memory_mb"])
+        t.deficit = float(snap.get("deficit", 0.0))
+        t.in_use = Resources(0, 0, 0)
+        t.gpu_seconds = float(snap.get("gpu_seconds", 0.0))
+        t.cost_units = float(snap.get("cost_units", 0.0))
+        t.placements = int(snap.get("placements", 0))
+        t.preemptions = int(snap.get("preemptions", 0))
+        return t
+
     # ---- admission --------------------------------------------------------
     def check_admission(self, tenant: str, demand: Resources):
         """Reject work whose total demand can never fit in the quota."""

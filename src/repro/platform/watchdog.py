@@ -19,7 +19,7 @@ import traceback
 from typing import Callable, Optional
 
 from repro.platform.cluster import Preempted, UserError
-from repro.platform.zookeeper import ZooKeeper
+from repro.platform.zookeeper import ZooKeeper, zk_retry
 
 # learner status values (paper: e.g. JOB_FAILED)
 PENDING, DOWNLOADING, TRAINING, CHECKPOINTING, JOB_DONE, JOB_FAILED = (
@@ -36,34 +36,37 @@ class Watchdog:
         self.base = f"/dlaas/jobs/{job_id}/members/{member}"
         self.preempt_check = preempt_check
         self.session = zk.session()
-        zk.ensure(self.base)
-        zk.create(f"{self.base}/alive", b"1", ephemeral=True,
-                  session=self.session, makepath=True)
+        # a transient quorum loss at container start must not kill the
+        # task before it even runs — bounded retry, then give up loudly
+        zk_retry(lambda: zk.ensure(self.base))
+        zk_retry(lambda: zk.create(
+            f"{self.base}/alive", b"1", ephemeral=True,
+            session=self.session, makepath=True))
         self.set_status(PENDING)
 
     # ---- status / heartbeat / logs ---------------------------------------
+    def _put(self, path: str, data: bytes):
+        def write():
+            if self.zk.exists(path):
+                self.zk.set(path, data)
+            else:
+                self.zk.create(path, data, makepath=True)
+        zk_retry(write)
+
     def set_status(self, status: str, detail: str = ""):
-        data = json.dumps({"status": status, "detail": detail,
-                           "ts": time.time()}).encode()
-        path = f"{self.base}/status"
-        if self.zk.exists(path):
-            self.zk.set(path, data)
-        else:
-            self.zk.create(path, data, makepath=True)
+        self._put(f"{self.base}/status",
+                  json.dumps({"status": status, "detail": detail,
+                              "ts": time.time()}).encode())
 
     def heartbeat(self, step: int, **metrics):
-        data = json.dumps({"step": step, "ts": time.time(),
-                           **metrics}).encode()
-        path = f"{self.base}/heartbeat"
-        if self.zk.exists(path):
-            self.zk.set(path, data)
-        else:
-            self.zk.create(path, data, makepath=True)
+        self._put(f"{self.base}/heartbeat",
+                  json.dumps({"step": step, "ts": time.time(),
+                              **metrics}).encode())
 
     def log(self, line: str):
         path = f"{self.base}/log"
-        self.zk.create(path + "/l", line.encode(), sequential=True,
-                       makepath=True)
+        zk_retry(lambda: self.zk.create(
+            path + "/l", line.encode(), sequential=True, makepath=True))
 
     def maybe_preempt(self):
         """Raise Preempted if the scheduler asked this task to yield.

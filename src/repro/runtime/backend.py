@@ -158,6 +158,8 @@ class SoftwarePSBackend(ExecutionBackend):
             seed=int(manifest.get("seed", 0)),
             checkpoint_dir=f"{ctx.workdir}/ckpt/{spec.job_id}",
             checkpoint_every=int(manifest.get("checkpoint_every", 20)),
+            ckpt_mirror=(ctx.storage, "objectstore",
+                         f"ckpt/{spec.job_id}"),
             user_error_at=manifest.get("user_error_at"),
             fail_at_step={int(k): int(v) for k, v in
                           (manifest.get("fail_at_step") or {}).items()},
@@ -334,7 +336,9 @@ def _make_pjit_body(*, job_id, cfg, dspec, cursor, ctx, control, results,
         tc = TrainerConfig(batch=batch_docs, seq=dspec.seq_len,
                            ckpt_every=ckpt_every,
                            ckpt_dir=f"{ctx.workdir}/ckpt/{job_id}",
-                           job_id=job_id)
+                           job_id=job_id,
+                           ckpt_mirror=(ctx.storage, "objectstore",
+                                        f"ckpt/{job_id}"))
         tr = Trainer(cfg, dist, OptConfig(name=optimizer, lr=lr), tc,
                      metrics=ctx.metrics).init(seed)
         perf = meta.get("perf")

@@ -297,6 +297,9 @@ class LearnerJobConfig:
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 20
+    # (StorageManager, store_id, prefix): mirror every published
+    # checkpoint into the object store (backoff-wrapped uploads)
+    ckpt_mirror: Optional[tuple] = None
     # test hooks
     fail_at_step: Dict[int, int] = field(default_factory=dict)
     user_error_at: Optional[int] = None
@@ -333,7 +336,8 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
         ckpt = None
         start_step = 0
         if cfg.checkpoint_dir and idx == 0:
-            ckpt = CheckpointManager(cfg.checkpoint_dir, keep=3)
+            ckpt = CheckpointManager(cfg.checkpoint_dir, keep=3,
+                                     mirror=cfg.ckpt_mirror)
         # resume from checkpoint if one exists (any learner may restore
         # the global params by pulling after learner-0 pushed them)
         if cfg.checkpoint_dir:

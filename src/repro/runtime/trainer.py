@@ -39,6 +39,8 @@ class TrainerConfig:
     max_step_retries: int = 2
     log_every: int = 10
     job_id: str = "train"
+    # (StorageManager, store_id, prefix): object-store checkpoint mirror
+    ckpt_mirror: Optional[tuple] = None
 
 
 class Trainer:
@@ -50,7 +52,8 @@ class Trainer:
         self.tc = tc
         self.metrics = metrics or MetricsService()
         self.opts = opts or {"remat": "none"}
-        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=3)
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=3,
+                                      mirror=tc.ckpt_mirror)
         self.step = 0
         self._build(dist)
 

@@ -7,7 +7,8 @@ the REST API').
                                     --tenant T --priority P
                                     --distribution software-ps|pjit
                                     --compression none|int8
-                                    --ps-shards N]
+                                    --ps-shards N
+                                    --idempotency-key K]
   dlaas train list
   dlaas train status  --id <tid>
   dlaas train perf    --id <tid>            # roofline: bound, attainable
@@ -24,6 +25,7 @@ the REST API').
                       [--max-new N --deadline S]
   dlaas serve stop    --id <endpoint-id>        # drain, then stop
   dlaas queue                               # fair-share queue + tenants
+  dlaas recovery                            # last crash-recovery report
   dlaas cluster status                      # node lifecycle + autoscaler
   dlaas cluster add    [--gpus G --cpus C --memory M --spot --name N]
   dlaas cluster drain  --node <name>
@@ -42,10 +44,13 @@ import sys
 import urllib.request
 
 
-def _req(url: str, method: str = "GET", body=None, token: str = "cli"):
+def _req(url: str, method: str = "GET", body=None, token: str = "cli",
+         idempotency_key=None):
     data = json.dumps(body).encode() if body is not None else None
     req = urllib.request.Request(url, data=data, method=method)
     req.add_header("Authorization", f"Bearer {token}")
+    if idempotency_key:
+        req.add_header("Idempotency-Key", idempotency_key)
     if data:
         req.add_header("Content-Type", "application/json")
     with urllib.request.urlopen(req) as r:
@@ -87,6 +92,9 @@ def main(argv=None):
     s.add_argument("--ps-shards", type=int, dest="ps_shards",
                    help="software-PS shard count (default: manifest's "
                         "framework.ps_shards, else 4)")
+    s.add_argument("--idempotency-key", dest="idempotency_key",
+                   help="replay-safe submission: retrying with the same "
+                        "key returns the original training")
     tsub.add_parser("list")
     for name in ("status", "logs", "delete", "download", "rescale",
                  "perf"):
@@ -112,6 +120,9 @@ def main(argv=None):
     ss.add_argument("--gpus", type=int)
     ss.add_argument("--tenant")
     ss.add_argument("--priority", type=int)
+    ss.add_argument("--idempotency-key", dest="idempotency_key",
+                    help="replay-safe submission: retrying with the same "
+                         "key returns the original endpoint")
     svsub.add_parser("list")
     for name in ("status", "predict", "stop"):
         p = svsub.add_parser(name)
@@ -137,6 +148,8 @@ def main(argv=None):
     ca.add_argument("--name")
     cd = clsub.add_parser("drain")
     cd.add_argument("--node", required=True)
+
+    sub.add_parser("recovery")
 
     tn = sub.add_parser("tenant")
     tnsub = tn.add_subparsers(dest="sub", required=True)
@@ -169,7 +182,8 @@ def main(argv=None):
             body["tenant"] = args.tenant
         if args.priority is not None:
             body["priority"] = args.priority
-        out = _req(f"{base}/v1/trainings", "POST", body, args.token)
+        out = _req(f"{base}/v1/trainings", "POST", body, args.token,
+                   idempotency_key=args.idempotency_key)
         print(json.dumps(out))
     elif args.cmd == "train" and args.sub == "list":
         print(json.dumps(_req(f"{base}/v1/trainings", token=args.token),
@@ -210,7 +224,8 @@ def main(argv=None):
                  "max_new", "gpus", "tenant", "priority")
                 if getattr(args, k) is not None}
         print(json.dumps(_req(f"{base}/v1/models", "POST", body,
-                              args.token)))
+                              args.token,
+                              idempotency_key=args.idempotency_key)))
     elif args.cmd == "serve" and args.sub == "list":
         rows = _req(f"{base}/v1/models", token=args.token)
         print(json.dumps([r for r in rows
@@ -231,6 +246,9 @@ def main(argv=None):
                               token=args.token)))
     elif args.cmd == "queue":
         print(json.dumps(_req(f"{base}/v1/queue", token=args.token),
+                         indent=1))
+    elif args.cmd == "recovery":
+        print(json.dumps(_req(f"{base}/v1/recovery", token=args.token),
                          indent=1))
     elif args.cmd == "cluster" and args.sub == "status":
         print(json.dumps(_req(f"{base}/v1/cluster", token=args.token),

@@ -7,9 +7,20 @@ metrics, and executes real (smoke-scale) JAX training jobs under watchdog
 supervision through a pluggable execution backend (runtime/backend.py):
 ``software-ps`` learner threads or a ``pjit`` SPMD gang, selected by the
 manifest's ``framework.distribution``.
+
+Durability (the FfDL lesson — stateless services over durable metadata):
+by default the in-process ZooKeeper is backed by a write-ahead journal
+under ``<workdir>/journal``, and every piece of control-plane state the
+service owns (model manifests, job records, tenant billing, usage
+metering, idempotency reservations) lives in journaled znodes. A fresh
+``DLaaSCore`` over the same workdir replays the journal and runs a
+recovery pass: terminal jobs are re-registered as history, live
+trainings relaunch through the normal checkpoint-resume path, READY
+endpoints re-deploy, and billing never resets.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import json
 import os
@@ -22,12 +33,14 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.platform.cluster import Cluster, Node, Resources, Scheduler
+from repro.platform.journal import Journal
 from repro.platform.lcm import JobSpec, LifecycleManager
 from repro.platform.queue import QuotaExceeded
 from repro.platform.metrics import LogParserService, MetricsService
 from repro.platform.storage import (LocalFSStore, ObjectStore,
                                     StorageManager)
-from repro.platform.zookeeper import NoNodeError, ZooKeeper
+from repro.platform.zookeeper import (NodeExistsError, NoNodeError,
+                                      ZooKeeper)
 from repro.runtime.backend import BackendContext, get_backend
 from repro.runtime.learner import PLUGINS
 from repro.service.manifest import (parse_manifest, resolve_distribution,
@@ -68,10 +81,15 @@ class DLaaSCore:
     def __init__(self, workdir: str, *, cluster: Optional[Cluster] = None,
                  health_checks: bool = True, tick_interval: float = 0.02,
                  admin_users: Optional[set] = None,
-                 autoscale: Optional[Any] = None):
+                 autoscale: Optional[Any] = None,
+                 durable: bool = True):
         self.admin_users = admin_users
         _enable_jax_compile_cache()
-        self.zk = ZooKeeper()
+        # journaled ZK: constructing over an existing workdir replays
+        # the predecessor's mutations (durable=False opts out for
+        # throwaway cores that must not pay journal I/O)
+        self.zk = ZooKeeper(journal=Journal(f"{workdir}/journal")
+                            if durable else None)
         self.cluster = cluster or default_cluster()
         self.scheduler = Scheduler(self.cluster,
                                    health_checks=health_checks)
@@ -100,11 +118,20 @@ class DLaaSCore:
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._tick_errors: Dict[str, str] = {}
+        # metering (API layer concern, kept with the core for simplicity)
+        self.usage: Dict[str, int] = {}
+        # durable-billing mirror cache (tick loop persists on change)
+        self._billing_cache: Dict[str, Dict] = {}
+        self.crashed = False
+        # recovery pass BEFORE the ticker starts: the replayed tree is
+        # inspected and live jobs relaunched while nothing else mutates
+        self.recovery: Dict[str, Any] = {"recovered": False}
+        if durable and (self.zk.journal_stats.get("records", 0) > 0
+                        or self.zk.journal_stats.get("snapshot", 0) > 0):
+            self._recover()
         self._ticker = threading.Thread(target=self._tick_loop,
                                         args=(tick_interval,), daemon=True)
         self._ticker.start()
-        # metering (API layer concern, kept with the core for simplicity)
-        self.usage: Dict[str, int] = {}
         # kernel-grid degradations surface as a platform counter
         # (kernels/grid.py warns once per signature; the metric counts
         # every occurrence). Weakly bound: cores come and go in tests.
@@ -122,12 +149,32 @@ class DLaaSCore:
     def close(self):
         self._stop.set()
         self._ticker.join(timeout=2)
+        self.zk.detach_journal()
+
+    def crash(self):
+        """SIGKILL-equivalent teardown for crash drills: detach the
+        journal FIRST (nothing this incarnation does afterwards is
+        durable — exactly like a dead process), then stop the ticker and
+        force every running task body to bail at its next step boundary
+        so the zombie incarnation stops writing checkpoints into the
+        workdir a recovering core is about to adopt."""
+        self.zk.detach_journal()
+        self._stop.set()
+        self.crashed = True
+        for app in list(self.scheduler.apps.values()):
+            for t in list(app.tasks.values()):
+                t.preempt_event.set()
+        # crash_core fires from inside Scheduler.tick() on the ticker
+        # thread itself — joining would deadlock
+        if threading.current_thread() is not self._ticker:
+            self._ticker.join(timeout=2)
 
     def _tick_loop(self, interval: float):
         while not self._stop.is_set():
             try:
                 self.scheduler.tick()
                 self._mirror_transitions()
+                self._mirror_billing()
             except Exception as e:
                 self._tick_error("scheduler", e)
             for jid in list(self.trainings):
@@ -170,6 +217,46 @@ class DLaaSCore:
 
     def _meter(self, user: str):
         self.usage[user] = self.usage.get(user, 0) + 1
+        # durable: API-call metering must survive a control-plane crash
+        self._zset(f"/dlaas/usage/{user}", {"count": self.usage[user]})
+
+    # ---- durable znode helpers -------------------------------------------
+    def _zset(self, path: str, obj: Dict):
+        data = json.dumps(obj).encode()
+        if self.zk.exists(path):
+            self.zk.set(path, data)
+        else:
+            self.zk.create(path, data, makepath=True)
+
+    def _zget(self, path: str) -> Optional[Dict]:
+        try:
+            data, _ = self.zk.get(path)
+            return json.loads(data or b"{}")
+        except NoNodeError:
+            return None
+
+    def _zchildren(self, path: str) -> List[str]:
+        try:
+            return self.zk.children(path)
+        except NoNodeError:
+            return []
+
+    # billing fields worth journaling — NOT the per-tick-volatile
+    # deficit/in_use (deficit re-earns in the recovered queue; in_use
+    # rebuilds as relaunched jobs place)
+    _BILLING_KEYS = ("weight", "quota", "gpu_seconds", "cost_units",
+                     "placements", "preemptions")
+
+    def _mirror_billing(self):
+        """Persist tenant billing/fair-share standing on change, so
+        gpu-second metering survives a control-plane crash (the paper's
+        multi-tenant accounting must never reset)."""
+        for name, snap in self.scheduler.tenant_snapshots().items():
+            durable = {k: snap[k] for k in self._BILLING_KEYS}
+            if self._billing_cache.get(name) == durable:
+                continue
+            self._billing_cache[name] = durable
+            self._zset(f"/dlaas/tenants/{name}", durable)
 
     def _mirror_transitions(self):
         """Mirror new node-lifecycle transitions into the metrics
@@ -233,7 +320,8 @@ class DLaaSCore:
         else:
             sched = FaultSchedule(events)
         self.scheduler.faults = FaultInjector(sched, lcm=self.lcm,
-                                              metrics=self.metrics)
+                                              metrics=self.metrics,
+                                              core=self)
         return {"scheduled": [e.describe() for e in sched]}
 
     # ----------------------------------------------------------------- tenants
@@ -247,6 +335,7 @@ class DLaaSCore:
         t = self.scheduler.configure_tenant(
             name, weight=weight, quota_cpus=quota_cpus,
             quota_gpus=quota_gpus, quota_memory_mb=quota_memory_mb)
+        self._mirror_billing()       # write-through: config is durable now
         return {"tenant": name, **t.snapshot()}
 
     def is_admin(self, user: str) -> bool:
@@ -280,8 +369,246 @@ class DLaaSCore:
                                 key=lambda r: r["position"]),
                 "tenants": raw["tenants"]}
 
+    # ------------------------------------------------------- idempotency
+    def _idem_path(self, key: str) -> str:
+        # hashed: client keys are arbitrary strings, znode names are not
+        digest = hashlib.sha256(key.encode()).hexdigest()[:24]
+        return f"/dlaas/idempotency/{digest}"
+
+    def _idem_check(self, key: str, poll_s: float = 10.0
+                    ) -> Optional[Dict]:
+        """Replay guard: the stored response if this key already
+        completed; blocks while the original request is still in flight;
+        None if the key is unused."""
+        path = self._idem_path(key)
+        t0 = time.time()
+        while True:
+            rec = self._zget(path)
+            if rec is None:
+                return None
+            if rec.get("status") == "done":
+                self.metrics.incr("platform", "idempotent_replays_total")
+                return dict(rec["response"])
+            if time.time() - t0 > poll_s:
+                raise ValueError(
+                    f"request with this Idempotency-Key is still in "
+                    f"progress ({rec.get('kind')} {rec.get('id')})")
+            time.sleep(0.02)
+
+    def _idem_reserve(self, key: str, kind: str, job_id: str) -> bool:
+        """Atomically claim the key (crash-safe ordering: the durable
+        reservation lands BEFORE the job record, so a crash at any point
+        either replays to the original job or to a droppable pending
+        marker — never to a duplicate). False = lost the race."""
+        try:
+            self.zk.create(
+                self._idem_path(key),
+                json.dumps({"key": key, "kind": kind, "id": job_id,
+                            "status": "pending"}).encode(),
+                makepath=True)
+            return True
+        except NodeExistsError:
+            return False
+
+    def _idem_complete(self, key: str, kind: str, job_id: str,
+                       response: Dict):
+        self._zset(self._idem_path(key),
+                   {"key": key, "kind": kind, "id": job_id,
+                    "status": "done", "response": response})
+
+    def _idem_abort(self, key: Optional[str]):
+        if key is None:
+            return
+        try:
+            self.zk.delete(self._idem_path(key))
+        except NoNodeError:
+            pass
+
+    # ---------------------------------------------------------- recovery
+    def _recover(self):
+        """Rebuild service state from the replayed journal: models,
+        tenants, usage, then jobs — terminal ones become history, live
+        trainings relaunch through checkpoint-resume, live endpoints
+        re-deploy — and finally idempotency reservations are settled."""
+        rep: Dict[str, Any] = {
+            "recovered": True,
+            "journal": dict(self.zk.journal_stats),
+            "models": 0, "tenants": 0,
+            "trainings": {"resumed": [], "requeued": [],
+                          "completed": [], "abandoned": []},
+            "endpoints": {"redeployed": [], "abandoned": []},
+            "idempotency": {"completed": 0, "dropped": 0},
+        }
+        for mid in self._zchildren("/dlaas/models"):
+            mrec = self._zget(f"/dlaas/models/{mid}")
+            if mrec is not None:
+                self.models[mid] = {"model_id": mid, **mrec}
+                rep["models"] += 1
+        for name in self._zchildren("/dlaas/tenants"):
+            snap = self._zget(f"/dlaas/tenants/{name}")
+            if snap is not None:
+                self.scheduler.restore_tenant(name, snap)
+                self._billing_cache[name] = {
+                    k: snap.get(k) for k in self._BILLING_KEYS}
+                rep["tenants"] += 1
+        for user in self._zchildren("/dlaas/usage"):
+            urec = self._zget(f"/dlaas/usage/{user}") or {}
+            self.usage[user] = int(urec.get("count", 0))
+        jobs = self.lcm.jobs()
+        # never reuse a predecessor's training id
+        max_seq = 0
+        for jid in jobs:
+            if jid.startswith("training-"):
+                try:
+                    max_seq = max(max_seq, int(jid.split("-")[1]))
+                except (IndexError, ValueError):
+                    pass
+        self._job_seq = itertools.count(max_seq + 1)
+        # trainings first: endpoints may re-deploy from their results
+        for jid in jobs:
+            rec = self._zget(f"/dlaas/jobs/{jid}/record")
+            if not rec or rec.get("kind") != "training":
+                continue
+            state = self.lcm.job_state(jid)
+            base = {"training_id": jid, "model_id": rec["model_id"],
+                    "user": rec["user"], "tenant": rec["tenant"],
+                    "priority": rec["priority"], "backend": rec["backend"],
+                    "created": rec["created"], "manifest": rec["manifest"],
+                    "results": {}}
+            if state == "COMPLETED":
+                with self._lock:
+                    self.trainings[jid] = base
+                rep["trainings"]["completed"].append(jid)
+            elif state in ("FAILED", "KILLED"):
+                with self._lock:
+                    self.trainings[jid] = base
+                rep["trainings"]["abandoned"].append(jid)
+            else:
+                # QUEUED stays queued; DEPLOYING/PROCESSING/PREEMPTED
+                # re-enter through preemption/checkpoint-resume (the gang
+                # relaunches as one unit via its plan)
+                from repro.checkpoint.checkpoint import CheckpointManager
+                has_ckpt = CheckpointManager(
+                    f"{self.workdir}/ckpt/{jid}").latest_valid() is not None
+                try:
+                    self._relaunch_training(jid, rec)
+                except Exception as e:
+                    print(f"[recovery] relaunch {jid} failed: "
+                          f"{type(e).__name__}: {e}", file=sys.stderr)
+                    with self._lock:
+                        self.trainings[jid] = base
+                    rep["trainings"]["abandoned"].append(jid)
+                    continue
+                rep["trainings"]["resumed" if has_ckpt
+                                 else "requeued"].append(jid)
+        for jid in jobs:
+            rec = self._zget(f"/dlaas/jobs/{jid}/record")
+            if not rec or rec.get("kind") != "endpoint":
+                continue
+            if self.lcm.job_state(jid) in ("COMPLETED", "FAILED",
+                                           "KILLED"):
+                rep["endpoints"]["abandoned"].append(jid)
+                continue
+            self.lcm.clear_runtime_state(jid)
+            try:
+                self._launch_endpoint(jid, rec["args"], rec["user"])
+            except Exception as e:
+                print(f"[recovery] redeploy {jid} failed: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                rep["endpoints"]["abandoned"].append(jid)
+                continue
+            rep["endpoints"]["redeployed"].append(jid)
+        # settle idempotency reservations: a pending key whose job record
+        # landed completes (the client's retry must get the original id);
+        # one whose record never landed is dropped (the retry resubmits)
+        for tok in self._zchildren("/dlaas/idempotency"):
+            path = f"/dlaas/idempotency/{tok}"
+            irec = self._zget(path) or {}
+            if irec.get("status") == "done":
+                continue
+            kind, jid = irec.get("kind"), irec.get("id")
+            if kind == "model":
+                job = self._zget(f"/dlaas/models/{jid}") if jid else None
+            else:
+                job = (self._zget(f"/dlaas/jobs/{jid}/record")
+                       if jid else None)
+            if job is None:
+                try:
+                    self.zk.delete(path)
+                except NoNodeError:
+                    pass
+                rep["idempotency"]["dropped"] += 1
+                continue
+            if kind == "model":
+                resp = {"model_id": jid}
+            elif kind == "training":
+                resp = {"training_id": jid, "tenant": job["tenant"],
+                        "priority": job["priority"],
+                        "backend": job["backend"]}
+            else:
+                args = job.get("args", {})
+                resp = {"endpoint_id": jid, "arch": args.get("arch"),
+                        "tenant": args.get("tenant"),
+                        "source_training": args.get("from_training"),
+                        "state": "DEPLOYING"}
+            self._idem_complete(irec["key"], kind, jid, resp)
+            rep["idempotency"]["completed"] += 1
+        self.recovery = rep
+        m = self.metrics
+        m.incr("platform", "recoveries_total")
+        m.incr("platform", "recovery_journal_records",
+               rep["journal"].get("records", 0))
+        m.incr("platform", "recovery_journal_dropped",
+               rep["journal"].get("dropped", 0))
+        for bucket, ids in rep["trainings"].items():
+            m.incr("platform", f"recovery_trainings_{bucket}", len(ids))
+        for bucket, ids in rep["endpoints"].items():
+            m.incr("platform", f"recovery_endpoints_{bucket}", len(ids))
+        m.incr("platform", "recovery_idempotency_completed",
+               rep["idempotency"]["completed"])
+
+    def _relaunch_training(self, job_id: str, rec: Dict):
+        """Recovery relaunch: rebuild the plan from the persisted record
+        and resubmit. Admission is NOT re-checked — the job was admitted
+        before the crash and quotas were restored unchanged."""
+        manifest = rec["manifest"]
+        backend = get_backend(rec["backend"])
+        # stale runtime state would poison the relaunch: in particular a
+        # replayed data cursor ahead of the last checkpoint breaks
+        # loss parity with an uninterrupted run (cursor only moves
+        # forward; the checkpoint's epoch/offset is the truth)
+        self.lcm.clear_runtime_state(job_id)
+        spec = JobSpec(
+            job_id=job_id,
+            learners=int(manifest.get("learners", 1)),
+            gpus_per_learner=int(manifest.get("gpus", 1)),
+            memory_mb=int(str(manifest.get("memory", "1024MiB")
+                              ).rstrip("MiB") or 1024),
+            tenant=rec["tenant"], priority=rec["priority"])
+        ctx = BackendContext(zk=self.zk, storage=self.storage,
+                             metrics=self.metrics, workdir=self.workdir)
+        plan = backend.plan(spec, manifest, ctx)
+        trec = {"training_id": job_id, "model_id": rec["model_id"],
+                "user": rec["user"], "tenant": rec["tenant"],
+                "priority": rec["priority"], "created": rec["created"],
+                "backend": backend.name, "manifest": manifest,
+                "results": plan.results, "plan": plan, "spec": spec}
+        with self._lock:
+            self.trainings[job_id] = trec
+        trec["handle"] = backend.launch(plan, self.lcm)
+
+    def recovery_report(self) -> Dict:
+        """What the last construction replayed/resumed/abandoned
+        (GET /v1/recovery, ``dlaas recovery``)."""
+        return dict(self.recovery)
+
     # ------------------------------------------------------------------ models
-    def deploy_model(self, manifest_text: str, user: str = "anon") -> Dict:
+    def deploy_model(self, manifest_text: str, user: str = "anon",
+                     idempotency_key: Optional[str] = None) -> Dict:
+        if idempotency_key is not None:
+            prev = self._idem_check(idempotency_key)
+            if prev is not None:
+                return prev
         self._meter(user)
         manifest = parse_manifest(manifest_text)
         errs = validate_manifest(manifest)
@@ -292,11 +619,24 @@ class DLaaSCore:
             raise ValueError(f"unsupported framework {fw_name!r}; "
                              f"supported: {sorted(PLUGINS)}")
         model_id = f"model-{uuid.uuid4().hex[:8]}"
+        if idempotency_key is not None and \
+                not self._idem_reserve(idempotency_key, "model", model_id):
+            prev = self._idem_check(idempotency_key)
+            if prev is None:
+                raise ValueError("concurrent request with the same "
+                                 "Idempotency-Key failed; retry")
+            return prev
         rec = {"model_id": model_id, "manifest": manifest, "user": user,
                "created": time.time()}
         with self._lock:
             self.models[model_id] = rec
-        return {"model_id": model_id}
+        self._zset(f"/dlaas/models/{model_id}",
+                   {"manifest": manifest, "user": user,
+                    "created": rec["created"]})
+        resp = {"model_id": model_id}
+        if idempotency_key is not None:
+            self._idem_complete(idempotency_key, "model", model_id, resp)
+        return resp
 
     def list_models(self, user: str = "anon") -> List[Dict]:
         self._meter(user)
@@ -313,11 +653,22 @@ class DLaaSCore:
     def delete_model(self, model_id: str):
         with self._lock:
             self.models.pop(model_id, None)
+        try:
+            self.zk.delete(f"/dlaas/models/{model_id}")
+        except NoNodeError:
+            pass
 
     # --------------------------------------------------------------- trainings
     def create_training(self, model_id: str, overrides: Optional[Dict] = None,
                         user: str = "anon", tenant: Optional[str] = None,
-                        priority: Optional[int] = None) -> Dict:
+                        priority: Optional[int] = None,
+                        idempotency_key: Optional[str] = None) -> Dict:
+        # idempotent replay FIRST — before metering, so a client retrying
+        # across a crash is never billed twice for one submission
+        if idempotency_key is not None:
+            prev = self._idem_check(idempotency_key)
+            if prev is not None:
+                return prev
         self._meter(user)
         model = self.get_model(model_id)
         manifest = dict(model["manifest"])
@@ -346,24 +697,52 @@ class DLaaSCore:
         # full pjit gang), so deploy can never fail quota mid-way and
         # the gang can always place concurrently within quota.
         self.scheduler.check_admission(tenant, plan.total_resources())
-        rec = {"training_id": job_id, "model_id": model_id,
-               "user": user, "tenant": tenant, "priority": priority,
-               "created": time.time(), "backend": backend.name,
-               "manifest": manifest, "results": plan.results,
-               "plan": plan, "spec": spec}
-        with self._lock:
-            self.trainings[job_id] = rec
+        # crash-safe ordering: reserve the idempotency key (with the
+        # pre-allocated id), THEN persist the job record, then launch.
+        # A crash after the reservation but before the record replays to
+        # a droppable pending marker; after the record, to this job.
+        if idempotency_key is not None and \
+                not self._idem_reserve(idempotency_key, "training", job_id):
+            prev = self._idem_check(idempotency_key)
+            if prev is None:
+                raise ValueError("concurrent request with the same "
+                                 "Idempotency-Key failed; retry")
+            return prev
+        created = time.time()
         try:
-            rec["handle"] = backend.launch(plan, self.lcm)
-        except QuotaExceeded:
-            # quota tightened between the pre-check and deploy: roll
-            # back so no phantom training or orphaned PS app remains
+            self._zset(f"/dlaas/jobs/{job_id}/record",
+                       {"kind": "training", "model_id": model_id,
+                        "manifest": manifest, "user": user,
+                        "tenant": tenant, "priority": priority,
+                        "backend": backend.name, "created": created})
+            rec = {"training_id": job_id, "model_id": model_id,
+                   "user": user, "tenant": tenant, "priority": priority,
+                   "created": created, "backend": backend.name,
+                   "manifest": manifest, "results": plan.results,
+                   "plan": plan, "spec": spec}
             with self._lock:
-                self.trainings.pop(job_id, None)
-            self.lcm.kill(job_id)
+                self.trainings[job_id] = rec
+            try:
+                rec["handle"] = backend.launch(plan, self.lcm)
+            except QuotaExceeded:
+                # quota tightened between the pre-check and deploy: roll
+                # back so no phantom training or orphaned PS app remains
+                with self._lock:
+                    self.trainings.pop(job_id, None)
+                self.lcm.kill(job_id)
+                try:
+                    self.zk.delete(f"/dlaas/jobs/{job_id}/record")
+                except NoNodeError:
+                    pass
+                raise
+        except Exception:
+            self._idem_abort(idempotency_key)
             raise
-        return {"training_id": job_id, "tenant": tenant,
+        resp = {"training_id": job_id, "tenant": tenant,
                 "priority": priority, "backend": backend.name}
+        if idempotency_key is not None:
+            self._idem_complete(idempotency_key, "training", job_id, resp)
+        return resp
 
     def list_trainings(self, user: str = "anon") -> List[Dict]:
         self._meter(user)
@@ -506,12 +885,17 @@ class DLaaSCore:
                         memory_mb: int = 1024,
                         eos_id: Optional[int] = None, seed: int = 0,
                         user: str = "anon", tenant: Optional[str] = None,
-                        priority: int = 0) -> Dict:
+                        priority: int = 0,
+                        idempotency_key: Optional[str] = None) -> Dict:
         """Deploy an inference endpoint — from a COMPLETED training job
         (weights from its results/checkpoint) or straight from an arch
         (fresh init; load-testing path). The endpoint is a job: it flows
         through admission control, the fair-share queue and the LCM like
         a training, and its engine serves until drained."""
+        if idempotency_key is not None:
+            prev = self._idem_check(idempotency_key)
+            if prev is not None:
+                return prev
         self._meter(user)
         if from_training is not None:
             with self._lock:
@@ -540,22 +924,63 @@ class DLaaSCore:
                 "or 'arch' (a model-zoo architecture)")
         tenant = tenant or user
         endpoint_id = f"endpoint-{uuid.uuid4().hex[:8]}"
+        # everything re-deploy needs, persisted with the job record so a
+        # recovered core can rebuild the endpoint from znodes alone
+        args = {"from_training": from_training, "arch": arch,
+                "capacity": int(capacity), "max_queue": int(max_queue),
+                "max_new": int(max_new), "max_seq": max_seq,
+                "gpus": int(gpus), "memory_mb": int(memory_mb),
+                "eos_id": eos_id, "seed": int(seed),
+                "tenant": tenant, "priority": int(priority)}
+        if idempotency_key is not None and \
+                not self._idem_reserve(idempotency_key, "endpoint",
+                                       endpoint_id):
+            prev = self._idem_check(idempotency_key)
+            if prev is None:
+                raise ValueError("concurrent request with the same "
+                                 "Idempotency-Key failed; retry")
+            return prev
+        try:
+            ep = self._launch_endpoint(endpoint_id, args, user)
+        except Exception:
+            self._idem_abort(idempotency_key)
+            raise
+        resp = {"endpoint_id": endpoint_id, "arch": arch,
+                "tenant": tenant, "source_training": from_training,
+                "state": ep.state()}
+        if idempotency_key is not None:
+            self._idem_complete(idempotency_key, "endpoint", endpoint_id,
+                                resp)
+        return resp
+
+    def _launch_endpoint(self, endpoint_id: str, args: Dict,
+                         user: str) -> ModelEndpoint:
+        """Plan + admit + persist + launch one endpoint. Shared between
+        first deployment and crash-recovery re-deploy (same endpoint id,
+        args straight from the persisted record)."""
         backend = get_backend("serving")
         spec = JobSpec(job_id=endpoint_id, learners=1,
-                       gpus_per_learner=int(gpus),
-                       memory_mb=int(memory_mb),
-                       tenant=tenant, priority=int(priority))
+                       gpus_per_learner=int(args["gpus"]),
+                       memory_mb=int(args["memory_mb"]),
+                       tenant=args["tenant"],
+                       priority=int(args["priority"]))
         manifest = {
-            "framework": {"name": "repro-lm", "arch": arch},
-            "source_training": from_training,
-            "serving": {"capacity": int(capacity),
-                        "max_queue": int(max_queue),
-                        "max_new": int(max_new), "max_seq": max_seq,
-                        "eos_id": eos_id, "seed": int(seed)}}
+            "framework": {"name": "repro-lm", "arch": args["arch"]},
+            "source_training": args["from_training"],
+            "serving": {"capacity": int(args["capacity"]),
+                        "max_queue": int(args["max_queue"]),
+                        "max_new": int(args["max_new"]),
+                        "max_seq": args["max_seq"],
+                        "eos_id": args["eos_id"],
+                        "seed": int(args["seed"])}}
         ctx = BackendContext(zk=self.zk, storage=self.storage,
                              metrics=self.metrics, workdir=self.workdir)
         plan = backend.plan(spec, manifest, ctx)
-        self.scheduler.check_admission(tenant, plan.total_resources())
+        self.scheduler.check_admission(args["tenant"],
+                                       plan.total_resources())
+        self._zset(f"/dlaas/jobs/{endpoint_id}/record",
+                   {"kind": "endpoint", "args": args, "user": user,
+                    "created": time.time()})
         ep = ModelEndpoint(endpoint_id, plan, user=user)
         with self._lock:
             self.endpoints[endpoint_id] = ep
@@ -565,10 +990,12 @@ class DLaaSCore:
             with self._lock:
                 self.endpoints.pop(endpoint_id, None)
             self.lcm.kill(endpoint_id)
+            try:
+                self.zk.delete(f"/dlaas/jobs/{endpoint_id}/record")
+            except NoNodeError:
+                pass
             raise
-        return {"endpoint_id": endpoint_id, "arch": arch,
-                "tenant": tenant, "source_training": from_training,
-                "state": ep.state()}
+        return ep
 
     def _endpoint(self, endpoint_id: str) -> ModelEndpoint:
         with self._lock:

@@ -63,9 +63,18 @@ Endpoints (v1):
                                          (403 unless the token is in
                                           core.admin_users, when set)
   GET    /v1/usage                       API metering per user
+  GET    /v1/recovery                    last crash-recovery report:
+                                         journal replay stats + which
+                                         trainings resumed/requeued/
+                                         were abandoned + endpoints
+                                         redeployed
 
 Auth: ``Authorization: Bearer <user-token>``; the token's user is the
-metering principal. Stdlib-only (ThreadingHTTPServer).
+metering principal. ``Idempotency-Key: <key>`` on POST /v1/trainings or
+POST /v1/models makes the submission replay-safe: retrying with the same
+key (including after a control-plane crash) returns the original job
+instead of creating — or billing — a duplicate. Stdlib-only
+(ThreadingHTTPServer).
 """
 from __future__ import annotations
 
@@ -116,6 +125,9 @@ class _Handler(BaseHTTPRequestHandler):
     # ---- routing -----------------------------------------------------------
     def do_POST(self):
         user = _user_of(self)
+        # client-supplied submission key: replaying the same request
+        # (same key) returns the original job instead of a duplicate
+        idem = self.headers.get("Idempotency-Key") or None
         parts = [p for p in self.path.split("/") if p]
         try:
             if len(parts) == 4 and parts[:2] == ["v1", "models"] \
@@ -132,7 +144,8 @@ class _Handler(BaseHTTPRequestHandler):
                 body = self._body()
                 if "manifest" in body:
                     return self._json(
-                        self.core.deploy_model(body["manifest"], user),
+                        self.core.deploy_model(body["manifest"], user,
+                                               idempotency_key=idem),
                         201)
                 # serving: deploy an inference endpoint from a completed
                 # training job's weights, or fresh from an arch
@@ -142,14 +155,17 @@ class _Handler(BaseHTTPRequestHandler):
                        "eos_id", "seed", "tenant", "priority")
                       if body.get(k) is not None}
                 return self._json(
-                    self.core.deploy_endpoint(user=user, **kw), 201)
+                    self.core.deploy_endpoint(user=user,
+                                              idempotency_key=idem,
+                                              **kw), 201)
             if parts == ["v1", "trainings"]:
                 body = self._body()
                 return self._json(
                     self.core.create_training(
                         body["model_id"], body.get("overrides"), user,
                         tenant=body.get("tenant"),
-                        priority=body.get("priority")), 201)
+                        priority=body.get("priority"),
+                        idempotency_key=idem), 201)
             if len(parts) == 4 and parts[:2] == ["v1", "trainings"] \
                     and parts[3] == "rescale":
                 return self._json(self.core.rescale_training(parts[2]))
@@ -248,6 +264,8 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._json(self.core.tenant_usage())
             if parts == ["v1", "usage"]:
                 return self._json(self.core.usage)
+            if parts == ["v1", "recovery"]:
+                return self._json(self.core.recovery_report())
             return self._err(404, f"no route GET {self.path}")
         except KeyError as e:
             return self._err(404, str(e))

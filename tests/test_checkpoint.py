@@ -72,3 +72,34 @@ def test_restore_missing_leaf_raises(ckdir):
     cm.save(1, {"a": jnp.zeros(3)})
     with pytest.raises(FileNotFoundError):
         cm.restore(1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_fsync_on_publish_opt_in(ckdir, monkeypatch):
+    """DLAAS_FSYNC=1 turns on fsync-per-leaf + dir fsync; the published
+    checkpoint must round-trip identically either way."""
+    monkeypatch.setenv("DLAAS_FSYNC", "1")
+    cm = CheckpointManager(ckdir, async_save=False)
+    assert cm.fsync
+    t = _tree(7)
+    cm.save(3, t, extra={"step": 3})
+    assert cm.latest_valid() == 3
+    out, extra = cm.restore(3, t)
+    assert extra["step"] == 3
+    np.testing.assert_allclose(out["a"], t["a"])
+
+
+def test_object_store_mirror_uses_backoff_path(ckdir, tmp_path):
+    """Checkpoint publish with a mirror lands every leaf + manifest in
+    the object store via StorageManager.upload (the with_backoff path),
+    surviving injected transient store failures."""
+    from repro.platform.storage import ObjectStore, StorageManager
+    sm = StorageManager()
+    store = ObjectStore(str(tmp_path / "store"))
+    sm.register("objectstore", store)
+    store.inject_failures(2)              # upload must retry
+    cm = CheckpointManager(ckdir, async_save=False,
+                           mirror=(sm, "objectstore", "ckpt/j1"))
+    cm.save(4, _tree(4))
+    names = store.list("ckpt/j1/step_0000000004")
+    assert "manifest.json" in names
+    assert any(n.endswith(".npy") for n in names)
