@@ -61,6 +61,34 @@ if bad:
 print("except-pass check OK")
 EOF
 
+echo "== logging hygiene: no bare print() in src/ outside the CLI" \
+     "(everything routes through the structured 'repro' logger) =="
+python - <<'EOF'
+import ast
+import pathlib
+import sys
+
+# the CLI prints to stdout by contract; everything else must log so the
+# job/trace context filter and the per-job log hub see it
+ALLOW = {"src/repro/service/cli.py"}
+bad = []
+for p in sorted(pathlib.Path("src").rglob("*.py")):
+    if p.as_posix() in ALLOW:
+        continue
+    tree = ast.parse(p.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Name) \
+                and node.func.id == "print":
+            bad.append(f"{p}:{node.lineno}")
+if bad:
+    print("bare print() outside the CLI (use logging.getLogger"
+          "('repro.<area>')):")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print("print-free check OK")
+EOF
+
 echo "== ps-dataplane benchmark smoke (compression none vs int8) =="
 # tiny invocation of the data-plane bench: proves both wire formats
 # train end-to-end; writes to a temp file so the committed
@@ -111,6 +139,98 @@ try:
                                  "mean_batch_occupancy")})
 finally:
     core.close()
+EOF
+
+echo "== observability smoke: scrape /metrics during a training," \
+     "validate Prometheus text + dlaas_ families, live follow streams," \
+     "single-trace timeline =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+import tempfile
+import time
+import urllib.request
+
+from repro.observability.export import parse_prometheus_text
+from repro.service.rest import DLaaSServer
+
+MANIFEST = ("name: obs-smoke\nlearners: 2\ngpus: 1\nsteps: 60\n"
+            "checkpoint_every: 20\nframework:\n  name: repro-mlp\n"
+            "  d_in: 16\n  n_classes: 4\n")
+
+
+def req(url, method="GET", body=None):
+    data = json.dumps(body).encode() if body is not None else None
+    r = urllib.request.Request(url, data=data, method=method)
+    r.add_header("Authorization", "Bearer verify")
+    if data:
+        r.add_header("Content-Type", "application/json")
+    with urllib.request.urlopen(r) as resp:
+        return resp.read()
+
+
+with DLaaSServer(tempfile.mkdtemp(prefix="verify_obs_")) as srv:
+    base = srv.url
+    mid = json.loads(req(f"{base}/v1/models", "POST",
+                         {"manifest": MANIFEST}))["model_id"]
+    tid = json.loads(req(f"{base}/v1/trainings", "POST",
+                         {"model_id": mid}))["training_id"]
+    # scrape DURING the run: wait for PROCESSING, then hit /metrics
+    t0 = time.time()
+    while True:
+        st = json.loads(req(f"{base}/v1/trainings/{tid}"))["status"]
+        if st == "PROCESSING":
+            break
+        if st in ("COMPLETED", "FAILED", "KILLED") \
+                or time.time() - t0 > 300:
+            raise SystemExit(f"obs smoke FAILED: never PROCESSING ({st})")
+        time.sleep(0.02)
+    text = req(f"{base}/metrics").decode()
+    parsed = parse_prometheus_text(text)       # raises on malformed text
+    fams = parsed["families"]
+    for want in ("dlaas_queue_depth", "dlaas_cluster_nodes",
+                 "dlaas_cluster_gpus_free", "dlaas_journal_seq",
+                 "dlaas_journal_compactions_total", "dlaas_trace_spans",
+                 "dlaas_platform_events_total"):
+        if want not in fams:
+            raise SystemExit(f"obs smoke FAILED: /metrics missing "
+                             f"{want}; has {sorted(fams)}")
+    # live streams while the job runs: loss records + structured logs
+    raw = req(f"{base}/v1/trainings/{tid}/metrics?follow=1&max_s=3")
+    mlines = [json.loads(l) for l in raw.splitlines() if l.strip()]
+    if not (mlines and mlines[0]["type"] == "snapshot"
+            and any(r.get("metric") == "loss" for r in mlines[1:])):
+        raise SystemExit(f"obs smoke FAILED: metrics?follow=1 streamed "
+                         f"no live loss records ({len(mlines)} lines)")
+    raw = req(f"{base}/v1/trainings/{tid}/logs?follow=1&max_s=3")
+    llines = [json.loads(l) for l in raw.splitlines() if l.strip()]
+    if not any("step=" in r.get("line", "") for r in llines):
+        raise SystemExit("obs smoke FAILED: logs?follow=1 streamed no "
+                         f"training lines ({len(llines)} records)")
+    t0 = time.time()
+    while json.loads(req(f"{base}/v1/trainings/{tid}"))["status"] \
+            != "COMPLETED":
+        if time.time() - t0 > 300:
+            raise SystemExit("obs smoke FAILED: training never finished")
+        time.sleep(0.1)
+    # one trace, phases tile the lifetime without overlap
+    tl = json.loads(req(f"{base}/v1/trainings/{tid}/timeline"))
+    names = [s["name"] for s in tl["spans"]]
+    for want in ("job", "submit", "queue_wait", "place", "run",
+                 "checkpoint_publish"):
+        if want not in names:
+            raise SystemExit(f"obs smoke FAILED: timeline missing "
+                             f"{want!r} span: {names}")
+    phases = sorted((s for s in tl["spans"]
+                     if s["name"] in ("queue_wait", "place", "run",
+                                      "preempted")),
+                    key=lambda s: s["start"])
+    for a, b in zip(phases, phases[1:]):
+        if a["end"] is None or a["end"] > b["start"] + 1e-9:
+            raise SystemExit(f"obs smoke FAILED: overlapping phases "
+                             f"{a['name']}->{b['name']}")
+    print(f"observability smoke OK: {len(fams)} families, "
+          f"{len(mlines)} live metric lines, {len(llines)} live log "
+          f"records, {len(tl['spans'])} spans in one trace")
 EOF
 
 echo "== perf regression gate: fresh trajectory benches vs committed" \
@@ -381,9 +501,22 @@ try:
         time.sleep(0.1)
     post = core.predict(eid, [1, 2, 3], max_new=2)["tokens"]
     assert post == ids["pre_tokens"], (post, ids["pre_tokens"])
+    # the recovered job's timeline continues the submission-time trace
+    # and records the recovery pass as an event
+    tl = core.training_timeline(tid)
+    names = [s["name"] for s in tl["spans"]]
+    if "recovery" not in names:
+        raise SystemExit(f"crash drill FAILED: no recovery event in the "
+                         f"recovered timeline: {names}")
+    rec = core._zget(f"/dlaas/jobs/{tid}/record") or {}
+    if rec.get("trace_id") and tl["trace_id"] != rec["trace_id"]:
+        raise SystemExit(f"crash drill FAILED: timeline trace "
+                         f"{tl['trace_id']} != persisted "
+                         f"{rec['trace_id']}")
     print(f"crash-recovery drill OK: journal {rep['journal']}, "
           f"{tid} completed after SIGKILL, {eid} serving again, "
-          f"idempotent replay returned the original ids")
+          f"idempotent replay returned the original ids, recovery "
+          f"event in the persisted trace {tl['trace_id']}")
 finally:
     core.close()
 EOF

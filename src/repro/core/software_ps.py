@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
-import sys
+import logging
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -53,6 +53,8 @@ import numpy as np
 
 from repro.core.compression import (BLOCK, CompressedPush,
                                     make_compressor, pad_to_block)
+
+log = logging.getLogger("repro.ps")
 
 # below this many elements a BSP round is applied serially: the pool
 # dispatch would cost more than the fused update itself
@@ -328,10 +330,10 @@ class SoftwareParameterServer:
                     self._arrived.remove(slot)
                     with self._stats_lock:
                         self.push_timeouts += 1
-                    print(f"[software-ps{'/' + self.job_id if self.job_id else ''}] "
-                          f"BSP push from learner {learner_id} timed out "
-                          f"after {timeout}s; contribution withdrawn",
-                          file=sys.stderr)
+                    log.warning(
+                        "BSP push from learner %s timed out after %ss; "
+                        "contribution withdrawn", learner_id, timeout,
+                        extra={"job_id": self.job_id or "-"})
                     if self.metrics is not None and \
                             self.job_id is not None:
                         self.metrics.incr(self.job_id,

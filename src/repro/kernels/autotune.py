@@ -87,6 +87,8 @@ class AutotuneCache:
         self.path = path
         self._lock = threading.Lock()
         self._data: Optional[Dict[str, Dict]] = None
+        self.hits = 0       # lookups served from the cache
+        self.misses = 0     # lookups that forced a tuning sweep
 
     def _load(self) -> Dict[str, Dict]:
         if self._data is None:
@@ -99,7 +101,16 @@ class AutotuneCache:
 
     def get(self, key: str) -> Optional[Dict]:
         with self._lock:
-            return self._load().get(key)
+            rec = self._load().get(key)
+            if rec is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return rec
+
+    def size(self) -> int:
+        with self._lock:
+            return len(self._load())
 
     def put(self, key: str, record: Dict) -> None:
         with self._lock:

@@ -20,6 +20,7 @@ Usage:
 """
 import argparse
 import dataclasses
+import sys
 import gzip
 import json
 import time
@@ -155,7 +156,8 @@ def main() -> None:
                    "trace": traceback.format_exc()[-3000:]}
         jp.write_text(json.dumps(rec, indent=1))
         msg = {k: v for k, v in rec.items() if k not in ("trace", "hlo")}
-        print(json.dumps(msg), flush=True)
+        sys.stdout.write(json.dumps(msg) + "\n")
+        sys.stdout.flush()
 
 
 if __name__ == "__main__":

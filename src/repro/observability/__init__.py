@@ -1,0 +1,34 @@
+"""Platform observability layer (PR 9).
+
+Three pillars, threaded through every existing layer:
+
+  * ``trace``  — explicit-propagation distributed tracing: a trace_id is
+    minted at submission, carried on the job record / ExecutionPlan /
+    serving requests, and every lifecycle phase (submit → queue wait →
+    place → run → checkpoint → complete, plus preemption/resume,
+    endpoint deploy and per-request prefill/decode) lands as a span in a
+    ring-buffered ``TraceStore`` with per-job timeline reconstruction.
+  * ``export`` — a small typed counter/gauge/histogram registry rendered
+    as Prometheus text exposition (``GET /metrics``).
+  * ``log``    — structured ``logging`` setup with a job/trace context
+    filter and a per-job bounded pub-sub log hub that feeds the
+    ``GET /v1/trainings/<id>/logs?follow=1`` live stream.
+
+Everything here is stdlib-only and import-light: platform modules may
+import it without dragging in jax or the service layer.
+"""
+from repro.observability.export import (parse_prometheus_text,
+                                        prometheus_text)
+from repro.observability.log import (ContextFilter, JobLogHub,
+                                     job_log_context, register_hub,
+                                     setup_logging, unregister_hub)
+from repro.observability.stream import BoundedStream
+from repro.observability.trace import (Span, TraceStore, Tracer,
+                                       maybe_span, new_trace_id)
+
+__all__ = [
+    "BoundedStream", "ContextFilter", "JobLogHub", "Span", "TraceStore",
+    "Tracer", "job_log_context", "maybe_span", "new_trace_id",
+    "parse_prometheus_text", "prometheus_text", "register_hub",
+    "setup_logging", "unregister_hub",
+]

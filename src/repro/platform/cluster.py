@@ -16,11 +16,13 @@ HealthChecker drains the node first.
 from __future__ import annotations
 
 import itertools
-import sys
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
+
+log = logging.getLogger("repro.cluster")
 
 
 @dataclass
@@ -157,8 +159,8 @@ class Cluster:
             try:
                 cb(self)
             except Exception as e:       # observers must not wedge ticks
-                print(f"[cluster] capacity listener failed: "
-                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                log.warning("capacity listener failed: %s: %s",
+                            type(e).__name__, e)
 
     def subscribe(self, cb: Callable[["Cluster"], None]):
         """Register a capacity-change listener (fired when a node becomes
@@ -459,8 +461,8 @@ class Scheduler:
             except Exception as e:
                 # observer bugs must not wedge the scheduler, but they
                 # must be diagnosable
-                print(f"[scheduler] on_state callback for {t.task_id} "
-                      f"failed: {type(e).__name__}: {e}", file=sys.stderr)
+                log.warning("on_state callback for %s failed: %s: %s",
+                            t.task_id, type(e).__name__, e)
 
     def task_failed(self, task_id: str, msg: str = "",
                     user_error: bool = False):

@@ -78,11 +78,12 @@ class FaultInjector:
     training progress on every run."""
 
     def __init__(self, schedule: FaultSchedule, lcm=None,
-                 metrics=None, core=None):
+                 metrics=None, core=None, tracer=None):
         self.schedule = schedule
         self.lcm = lcm
         self.metrics = metrics
         self.core = core            # crash_core target (DLaaSCore)
+        self.tracer = tracer        # fault firings land in the timeline
         self._pending: List[FaultEvent] = list(schedule)
         self.fired: List[Dict] = []
 
@@ -107,6 +108,15 @@ class FaultInjector:
                                "applied": applied})
             if self.metrics is not None:
                 self.metrics.incr("cluster", f"faults_{ev.kind}")
+            if self.tracer is not None:
+                # cluster trace: every firing; plus the job's own trace
+                # when the event targets one, so chaos tests can assert
+                # cause -> effect ordering inside a single timeline
+                attrs = {"fault": ev.kind, "node": ev.node or "core",
+                         "tick": cluster.clock, "applied": applied}
+                self.tracer.event("cluster", "fault", **attrs)
+                if ev.job_id is not None:
+                    self.tracer.event(ev.job_id, "fault", **attrs)
 
     def _job_step(self, job_id: Optional[str]) -> Optional[int]:
         if self.lcm is None or job_id is None:

@@ -45,6 +45,7 @@ class Journal:
         self.fsync = fsync_enabled() if fsync is None else fsync
         self._fh = None
         self._since_snapshot = 0
+        self.compactions = 0        # snapshots published by this process
 
     # ---- append --------------------------------------------------------
     def append(self, record: Dict):
@@ -89,6 +90,7 @@ class Journal:
             self._fh.close()
         self._fh = open(self.log_path, "w", encoding="utf-8")
         self._since_snapshot = 0
+        self.compactions += 1
 
     # ---- recovery ------------------------------------------------------
     def load(self) -> Tuple[Optional[Dict], List[Dict], int]:

@@ -169,9 +169,10 @@ def plan_from_jobspec(spec: JobSpec) -> ExecutionPlan:
 
 
 class LifecycleManager:
-    def __init__(self, zk: ZooKeeper, scheduler: Scheduler):
+    def __init__(self, zk: ZooKeeper, scheduler: Scheduler, tracer=None):
         self.zk = zk
         self.scheduler = scheduler
+        self.tracer = tracer        # state writes become phase spans
         self._last_pos: Dict[str, Optional[int]] = {}
         zk.ensure("/dlaas/jobs")
 
@@ -191,6 +192,12 @@ class LifecycleManager:
         # monitor()/submit run on the tick thread: a brief quorum outage
         # (kill_replica chaos) must not crash the control loop
         zk_retry(write)
+        # every job state write is the single choke point lifecycle
+        # tracing hangs off: QUEUED/DEPLOYING/PROCESSING/... become
+        # non-overlapping phase spans in the job's timeline
+        if (self.tracer is not None and key == "state"
+                and "state" in value):
+            self.tracer.job_state_change(job_id, value["state"])
 
     def _get(self, job_id: str, key: str) -> Optional[Dict]:
         try:
@@ -290,10 +297,14 @@ class LifecycleManager:
     def _wrap_member(self, job_id: str, group: TaskGroup):
         from repro.platform.watchdog import Watchdog
 
+        trace_id = (self.tracer.trace_of(job_id)
+                    if self.tracer is not None else None)
+
         def run(task):
             idx = int(task.task_id.rsplit(".", 1)[1])
             wd = Watchdog(self.zk, job_id, f"{group.role}-{idx}",
-                          preempt_check=task.preempt_event.is_set)
+                          preempt_check=task.preempt_event.is_set,
+                          trace_id=trace_id)
             if group.body is None:
                 wd.run(lambda w: None)
             else:
@@ -449,8 +460,8 @@ class LifecycleManager:
 
     # ---- recovery (LCM statelessness) ----------------------------------------
     @classmethod
-    def recover(cls, zk: ZooKeeper, scheduler: Scheduler
+    def recover(cls, zk: ZooKeeper, scheduler: Scheduler, tracer=None
                 ) -> "LifecycleManager":
         """A fresh LCM instance adopting all state from ZooKeeper — the
         paper's decoupling claim: jobs proceed while the LCM is replaced."""
-        return cls(zk, scheduler)
+        return cls(zk, scheduler, tracer=tracer)

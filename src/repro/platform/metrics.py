@@ -19,14 +19,24 @@ component consumes (paper §Platform Architecture (2)).
 from __future__ import annotations
 
 import json
+import logging
 import math
 import re
-import sys
 import threading
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.observability.export import DEFAULT_BUCKETS
+from repro.observability.stream import BoundedStream
+
+log = logging.getLogger("repro.metrics")
+
+# every Series is a bounded ring: long jobs emit one loss per step
+# forever, and an unbounded list was the platform's slowest memory leak
+SERIES_CAP = 65536
+EVENTS_CAP = 4096
 
 
 @dataclass
@@ -34,12 +44,57 @@ class Series:
     steps: List[int] = field(default_factory=list)
     values: List[float] = field(default_factory=list)
 
-    def add(self, step: int, value: float):
+    def add(self, step: int, value: float, cap: int = SERIES_CAP):
         self.steps.append(step)
         self.values.append(float(value))
+        if len(self.values) > cap:
+            del self.steps[:-cap]
+            del self.values[:-cap]
 
     def window(self, n: int) -> List[float]:
         return self.values[-n:]
+
+
+class _Counter:
+    """Typed handle over one MetricsService counter."""
+
+    __slots__ = ("_m", "_scope", "_name")
+
+    def __init__(self, m: "MetricsService", scope: str, name: str):
+        self._m, self._scope, self._name = m, scope, name
+
+    def inc(self, value: float = 1.0):
+        self._m.incr(self._scope, self._name, value)
+
+    def get(self) -> float:
+        return self._m.counters(self._scope).get(self._name, 0.0)
+
+
+class _Gauge:
+    __slots__ = ("_m", "_scope", "_name")
+
+    def __init__(self, m: "MetricsService", scope: str, name: str):
+        self._m, self._scope, self._name = m, scope, name
+
+    def set(self, value: float):
+        self._m.set_gauge(self._scope, self._name, value)
+
+    def get(self) -> Optional[float]:
+        with self._m._lock:
+            return self._m._gauges.get(self._scope, {}).get(self._name)
+
+
+class _Histogram:
+    __slots__ = ("_m", "_scope", "_name", "_buckets")
+
+    def __init__(self, m: "MetricsService", scope: str, name: str,
+                 buckets: Tuple[float, ...]):
+        self._m, self._scope, self._name = m, scope, name
+        self._buckets = buckets
+
+    def observe(self, value: float):
+        self._m.observe(self._scope, self._name, value,
+                        buckets=self._buckets)
 
 
 class MetricsService:
@@ -50,19 +105,37 @@ class MetricsService:
         self._events: Dict[str, List[Dict]] = defaultdict(list)
         self._counters: Dict[str, Dict[str, float]] = defaultdict(
             lambda: defaultdict(float))
+        self._gauges: Dict[str, Dict[str, float]] = defaultdict(dict)
+        self._hists: Dict[str, Dict[str, Dict]] = defaultdict(dict)
         self._subs: List[Callable[[str, str, int, float], None]] = []
+        # per-job live taps for the ?follow=1 metric streams
+        self._streams: Dict[str, List[BoundedStream]] = defaultdict(list)
 
     # ---- ingestion ----------------------------------------------------------
-    def record(self, job_id: str, metric: str, step: int, value: float):
-        with self._lock:
-            self._series[job_id][metric].add(step, value)
+    def _fanout(self, job_id: str, metric: str, step: int,
+                value: float):
+        """Fire legacy callbacks + live stream taps (outside the lock:
+        subscribers may call back into the service)."""
         for cb in self._subs:
             try:
                 cb(job_id, metric, step, value)
             except Exception as e:
-                print(f"[metrics] subscriber failed for {job_id}/"
-                      f"{metric}: {type(e).__name__}: {e}",
-                      file=sys.stderr)
+                log.warning("subscriber failed for %s/%s: %s: %s",
+                            job_id, metric, type(e).__name__, e)
+        self._publish(job_id, {"type": "metric", "job_id": job_id,
+                               "metric": metric, "step": step,
+                               "value": value, "ts": time.time()})
+
+    def _publish(self, job_id: str, rec: Dict):
+        with self._lock:
+            taps = list(self._streams.get(job_id, ()))
+        for s in taps:
+            s.put(rec)
+
+    def record(self, job_id: str, metric: str, step: int, value: float):
+        with self._lock:
+            self._series[job_id][metric].add(step, value)
+        self._fanout(job_id, metric, step, value)
 
     def record_bounded(self, job_id: str, metric: str, step: int,
                        value: float, keep: int = 4096):
@@ -73,18 +146,8 @@ class MetricsService:
         over the window are a rolling view, which is what an endpoint's
         p50/p99 should mean anyway."""
         with self._lock:
-            s = self._series[job_id][metric]
-            s.add(step, value)
-            if len(s.values) > keep:
-                del s.steps[:-keep]
-                del s.values[:-keep]
-        for cb in self._subs:
-            try:
-                cb(job_id, metric, step, value)
-            except Exception as e:
-                print(f"[metrics] subscriber failed for {job_id}/"
-                      f"{metric}: {type(e).__name__}: {e}",
-                      file=sys.stderr)
+            self._series[job_id][metric].add(step, value, cap=keep)
+        self._fanout(job_id, metric, step, value)
 
     def incr(self, job_id: str, counter: str, value: float = 1.0):
         """Atomic monotonic counter — safe against concurrent learners
@@ -96,13 +159,69 @@ class MetricsService:
         with self._lock:
             return dict(self._counters[job_id])
 
-    def event(self, job_id: str, kind: str, step: int, **kw):
+    def set_gauge(self, scope: str, name: str, value: float):
         with self._lock:
-            self._events[job_id].append({"kind": kind, "step": step,
-                                         "ts": time.time(), **kw})
+            self._gauges[scope][name] = float(value)
+
+    def observe(self, scope: str, name: str, value: float,
+                buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        """One histogram observation (non-cumulative bucket counts; the
+        exporter cumulates at render time)."""
+        with self._lock:
+            h = self._hists[scope].get(name)
+            if h is None:
+                h = self._hists[scope][name] = {
+                    "buckets": list(buckets),
+                    "counts": [0] * len(buckets),
+                    "sum": 0.0, "count": 0}
+            for i, bound in enumerate(h["buckets"]):
+                if value <= bound:
+                    h["counts"][i] += 1
+                    break
+            h["sum"] += float(value)
+            h["count"] += 1
+
+    # typed wrappers: call sites migrate from stringly incr() onto these
+    def counter(self, scope: str, name: str) -> _Counter:
+        return _Counter(self, scope, name)
+
+    def gauge(self, scope: str, name: str) -> _Gauge:
+        return _Gauge(self, scope, name)
+
+    def histogram(self, scope: str, name: str,
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS
+                  ) -> _Histogram:
+        return _Histogram(self, scope, name, buckets)
+
+    def event(self, job_id: str, kind: str, step: int, **kw):
+        rec = {"kind": kind, "step": step, "ts": time.time(), **kw}
+        with self._lock:
+            ev = self._events[job_id]
+            ev.append(rec)
+            if len(ev) > EVENTS_CAP:
+                del ev[:-EVENTS_CAP]
+        self._publish(job_id, {"type": "event", "job_id": job_id, **rec})
 
     def subscribe(self, cb: Callable[[str, str, int, float], None]):
         self._subs.append(cb)
+
+    # ---- live streaming ------------------------------------------------------
+    def stream(self, job_id: str, maxlen: int = 256) -> BoundedStream:
+        """A bounded live tap on one job's metric/event flow (the
+        ``/v1/trainings/<id>/metrics?follow=1`` feed)."""
+        s = BoundedStream(maxlen=maxlen)
+        with self._lock:
+            self._streams[job_id].append(s)
+        return s
+
+    def unsubscribe_stream(self, job_id: str, stream: BoundedStream):
+        with self._lock:
+            taps = self._streams.get(job_id)
+            if taps and stream in taps:
+                taps.remove(stream)
+                if not taps:
+                    del self._streams[job_id]
+        stream.close()
 
     # ---- queries ---------------------------------------------------------------
     def series(self, job_id: str, metric: str) -> Series:
@@ -129,16 +248,51 @@ class MetricsService:
         """Unregister a job's metrics (series, events, counters) — the
         endpoint-teardown path: the owner snapshots what it needs, then
         drops the rest so a long-lived service doesn't accumulate
-        per-endpoint state forever."""
+        per-endpoint state forever. Live stream subscribers are closed
+        and detached too — a torn-down endpoint must not leak taps."""
         with self._lock:
             self._series.pop(job_id, None)
             self._events.pop(job_id, None)
             self._counters.pop(job_id, None)
+            self._gauges.pop(job_id, None)
+            self._hists.pop(job_id, None)
+            taps = self._streams.pop(job_id, [])
+        for s in taps:
+            s.close()
 
     def events(self, job_id: str, kind: Optional[str] = None) -> List[Dict]:
         with self._lock:
             ev = list(self._events[job_id])
         return [e for e in ev if kind is None or e["kind"] == kind]
+
+    # ---- exporter snapshots (consumed by observability.export) ---------------
+    def counters_snapshot(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {scope: dict(cs)
+                    for scope, cs in self._counters.items()}
+
+    def gauges_snapshot(self) -> List[Tuple[str, str, float]]:
+        with self._lock:
+            return [(scope, name, v)
+                    for scope, gs in self._gauges.items()
+                    for name, v in gs.items()]
+
+    def hists_snapshot(self) -> List[Tuple[str, str, Dict]]:
+        with self._lock:
+            return [(scope, name,
+                     {"buckets": list(h["buckets"]),
+                      "counts": list(h["counts"]),
+                      "sum": h["sum"], "count": h["count"]})
+                    for scope, hs in self._hists.items()
+                    for name, h in hs.items()]
+
+    def last_values(self) -> List[Tuple[str, str, int, float]]:
+        """Last point of every series — the ``dlaas_job_metric_last``
+        gauge family."""
+        with self._lock:
+            return [(job_id, metric, s.steps[-1], s.values[-1])
+                    for job_id, ms in self._series.items()
+                    for metric, s in ms.items() if s.values]
 
     def to_json(self, job_id: str) -> str:
         """The 'common JSON list format' of the visualization pipeline."""
@@ -253,7 +407,16 @@ class LogParserService:
     def feed(self, job_id: str, line: str) -> int:
         n = 0
         for p in self._parsers:
-            for rec in p(line):
+            try:
+                recs = p(line)
+            except Exception as e:
+                # a broken custom parser must not break the feed (or the
+                # other parsers) for every subsequent log line
+                log.warning("log parser failed on %r: %s: %s",
+                            line, type(e).__name__, e,
+                            extra={"job_id": job_id})
+                continue
+            for rec in recs:
                 self.metrics.record(job_id, rec["metric"], rec["step"],
                                     rec["value"])
                 n += 1

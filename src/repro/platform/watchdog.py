@@ -14,12 +14,18 @@ exit (which deletes the ephemeral and wakes the LCM).
 from __future__ import annotations
 
 import json
+import logging
 import time
 import traceback
 from typing import Callable, Optional
 
 from repro.platform.cluster import Preempted, UserError
 from repro.platform.zookeeper import ZooKeeper, zk_retry
+
+# the per-job structured log channel: records carry job_id/trace_id/
+# member extras, and the observability HubHandler fans them into the
+# live ``logs?follow=1`` streams
+job_log = logging.getLogger("repro.job")
 
 # learner status values (paper: e.g. JOB_FAILED)
 PENDING, DOWNLOADING, TRAINING, CHECKPOINTING, JOB_DONE, JOB_FAILED = (
@@ -29,10 +35,12 @@ PENDING, DOWNLOADING, TRAINING, CHECKPOINTING, JOB_DONE, JOB_FAILED = (
 
 class Watchdog:
     def __init__(self, zk: ZooKeeper, job_id: str, member: str,
-                 preempt_check: Optional[Callable[[], bool]] = None):
+                 preempt_check: Optional[Callable[[], bool]] = None,
+                 trace_id: Optional[str] = None):
         self.zk = zk
         self.job_id = job_id
         self.member = member            # e.g. learner-0, ps-0
+        self.trace_id = trace_id or "-"
         self.base = f"/dlaas/jobs/{job_id}/members/{member}"
         self.preempt_check = preempt_check
         self.session = zk.session()
@@ -67,6 +75,10 @@ class Watchdog:
         path = f"{self.base}/log"
         zk_retry(lambda: self.zk.create(
             path + "/l", line.encode(), sequential=True, makepath=True))
+        # mirror into the structured per-job channel (live streams)
+        job_log.info("%s", line,
+                     extra={"job_id": self.job_id, "member": self.member,
+                            "trace_id": self.trace_id})
 
     def maybe_preempt(self):
         """Raise Preempted if the scheduler asked this task to yield.

@@ -20,13 +20,15 @@ their session, and after a process crash every session is gone.
 from __future__ import annotations
 
 import base64
-import sys
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .journal import Journal
+
+log = logging.getLogger("repro.zk")
 
 
 class ZKError(Exception):
@@ -228,6 +230,23 @@ class ZooKeeper:
             if self._journal is not None:
                 self._journal.snapshot(self._snapshot_state())
 
+    def journal_live_stats(self) -> Dict:
+        """Exporter view of the durability layer: replay stats from the
+        last recovery plus live append/compaction counters."""
+        with self._lock:
+            j = self._journal
+            out = {"seq": self._seq,
+                   "snapshot": self.journal_stats.get("snapshot", 0),
+                   "records_replayed": self.journal_stats.get(
+                       "records", 0),
+                   "dropped": self.journal_stats.get("dropped", 0),
+                   "since_compact": 0, "compactions_total": 0,
+                   "attached": int(j is not None)}
+            if j is not None:
+                out["since_compact"] = j._since_snapshot
+                out["compactions_total"] = j.compactions
+            return out
+
     def detach_journal(self):
         """Stop journaling — nothing after this call is durable. Used by
         the SIGKILL-equivalent core crash: the dying incarnation's
@@ -419,5 +438,5 @@ class ZooKeeper:
             try:
                 cb(path, event)
             except Exception as e:
-                print(f"[zk] watch callback for {path} failed: "
-                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                log.warning("watch callback for %s failed: %s: %s",
+                            path, type(e).__name__, e)

@@ -54,6 +54,8 @@ class BackendContext:
     storage: StorageManager
     metrics: MetricsService
     workdir: str
+    tracer: Optional[object] = None     # observability.trace.Tracer
+    loghub: Optional[object] = None     # observability.log.JobLogHub
 
 
 @dataclass
@@ -170,6 +172,14 @@ class SoftwarePSBackend(ExecutionBackend):
         # learner's first step then finds it ready (or waits on it)
         if hasattr(plugin, "warm_async"):
             plugin.warm_async(jcfg.batch_docs, jcfg.data_cfg)
+            warming = getattr(plugin, "_warming", None)
+            if ctx.tracer is not None and warming is not None:
+                wsp = ctx.tracer.start(spec.job_id, "warm_compile",
+                                       framework=fw_name)
+                threading.Thread(
+                    target=lambda: (warming.wait(120.0),
+                                    ctx.tracer.end(wsp)),
+                    daemon=True).start()
         # flat_state caches the (seed -> flat weights) result, and the
         # plugin is handed to the learner body below — the model is
         # initialized and jitted once per job, not once per layer
@@ -200,7 +210,7 @@ class SoftwarePSBackend(ExecutionBackend):
         control = JobControl()
         body = make_learner_body(jcfg, ps, cursor, ctx.storage,
                                  ctx.metrics, results, control=control,
-                                 plugin=plugin)
+                                 plugin=plugin, tracer=ctx.tracer)
         groups = []
         if spec.learners > 1:
             groups.append(TaskGroup(
@@ -356,10 +366,16 @@ def _make_pjit_body(*, job_id, cfg, dspec, cursor, ctx, control, results,
                            int(extra.get("offset", 0)))
             wd.log(f"resumed from checkpoint step={tr.step}")
 
+        from repro.observability.trace import (TRACE_STEP_SAMPLE,
+                                               maybe_span)
+        tracer = ctx.tracer
+
         def save_ckpt():
             wd.set_status(CHECKPOINTING)
-            epoch, offset = cursor.position()
-            tr.save(extra={"epoch": epoch, "offset": offset})
+            with maybe_span(tracer, job_id, "checkpoint_publish",
+                            step=tr.step):
+                epoch, offset = cursor.position()
+                tr.save(extra={"epoch": epoch, "offset": offset})
             ctx.metrics.event(job_id, "checkpoint", tr.step)
             wd.set_status(TRAINING)
 
@@ -380,8 +396,13 @@ def _make_pjit_body(*, job_id, cfg, dspec, cursor, ctx, control, results,
             if user_error_at is not None and step == user_error_at:
                 raise UserError("bad hyperparameter in user model")
             batch = corpus.batch_for(cursor.next_chunk(batch_docs))
+            step_sp = (tracer.start(job_id, "step", step=step)
+                       if tracer is not None
+                       and step % TRACE_STEP_SAMPLE == 0 else None)
             loss = tr.step_once({"tokens": jnp.asarray(batch["tokens"]),
                                  "labels": jnp.asarray(batch["labels"])})
+            if step_sp is not None:
+                tracer.end(step_sp, loss=float(loss))
             wd.heartbeat(step, loss=loss)
             wd.log(f"step={step} loss={loss:.4f}")
             ctx.metrics.record(job_id, "lr", step, lr)

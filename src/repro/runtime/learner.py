@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import io
 import json
-import sys
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
@@ -26,10 +26,13 @@ from repro.checkpoint.checkpoint import CheckpointManager
 from repro.core.cursor import GlobalCursor
 from repro.core.software_ps import SoftwareParameterServer
 from repro.data.pipeline import DatasetSpec, SyntheticCorpus
+from repro.observability.trace import TRACE_STEP_SAMPLE, maybe_span
 from repro.platform.cluster import UserError
 from repro.platform.metrics import MetricsService
 from repro.platform.storage import StorageManager
 from repro.platform.watchdog import CHECKPOINTING, TRAINING, Watchdog
+
+log = logging.getLogger("repro.learner")
 
 
 # ---------------------------------------------------------------------------
@@ -133,8 +136,8 @@ class LMPlugin:
                               {"tokens": jnp.asarray(zeros),
                                "labels": jnp.asarray(zeros)})
             except Exception as e:          # advisory: log, never crash
-                print(f"[learner] warmup compile failed: "
-                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                log.warning("warmup compile failed: %s: %s",
+                            type(e).__name__, e)
             finally:
                 ev.set()
         threading.Thread(target=run, daemon=True,
@@ -309,7 +312,7 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                       cursor: GlobalCursor, storage: StorageManager,
                       metrics: MetricsService,
                       results: Optional[Dict] = None,
-                      control=None, plugin=None):
+                      control=None, plugin=None, tracer=None):
     """Returns fn(watchdog, learner_idx) run under the watchdog.
 
     ``control`` (platform.lcm.JobControl, optional) adds the backend
@@ -360,12 +363,14 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
 
         def save_ckpt(step, flat):
             wd.set_status(CHECKPOINTING)
-            epoch, offset = cursor.position()
-            # copy: the save is async and `flat` may alias the reused
-            # pull buffer
-            ckpt.save(step, {"flat": np.array(flat)},
-                      extra={"step": step, "epoch": epoch,
-                             "offset": offset})
+            with maybe_span(tracer, cfg.job_id, "checkpoint_publish",
+                            step=step):
+                epoch, offset = cursor.position()
+                # copy: the save is async and `flat` may alias the
+                # reused pull buffer
+                ckpt.save(step, {"flat": np.array(flat)},
+                          extra={"step": step, "epoch": epoch,
+                                 "offset": offset})
             metrics.event(cfg.job_id, "checkpoint", step)
             wd.set_status(TRAINING)
 
@@ -390,6 +395,12 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                 raise UserError("bad hyperparameter in user model")
             chunks = cursor.next_chunk(cfg.batch_docs)
             batch = corpus.batch_for(chunks)
+            # sampled step spans from the lead learner only: one span
+            # every TRACE_STEP_SAMPLE steps keeps the trace ring useful
+            step_sp = (tracer.start(cfg.job_id, "step", step=step,
+                                    learner=idx)
+                       if tracer is not None and idx == 0
+                       and step % TRACE_STEP_SAMPLE == 0 else None)
             loss, gflat = plugin.flat_loss_grad(flat, batch)
             if cfg.solver == "psgd":
                 t0 = time.time()
@@ -405,6 +416,8 @@ def make_learner_body(cfg: LearnerJobConfig, ps: SoftwareParameterServer,
                     client.push(flat)
                     flat = client.pull()
                     sync_s = time.time() - t0
+            if step_sp is not None:
+                tracer.end(step_sp, loss=float(loss))
             wd.heartbeat(step, loss=float(loss))
             wd.log(f"step={step} loss={float(loss):.4f}"
                    + (f" acc={plugin.last_acc:.4f}"

@@ -13,9 +13,16 @@ the REST API').
   dlaas train status  --id <tid>
   dlaas train perf    --id <tid>            # roofline: bound, attainable
                                             # vs measured rate
-  dlaas train logs    --id <tid> [--follow]
+  dlaas train logs    --id <tid> [--follow]  # -f tails the live
+                                            # structured NDJSON stream
+  dlaas train timeline --id <tid> [--json]  # end-to-end trace: phase
+                                            # spans (queue/place/run),
+                                            # steps, checkpoints,
+                                            # recovery + cluster events
   dlaas train delete  --id <tid>
   dlaas train download --id <tid> --out model.npy
+  dlaas metrics                             # whole-platform Prometheus
+                                            # text (GET /metrics)
   dlaas serve start   --from-training <tid> | --arch <arch-id>
                       [--capacity N --max-queue N --max-new N
                        --tenant T --priority P]
@@ -61,6 +68,38 @@ def _req(url: str, method: str = "GET", body=None, token: str = "cli",
         return payload          # binary payload (model download)
 
 
+def _render_timeline(tl: dict):
+    """Human-readable span tree: offset from trace start, duration,
+    name, status — children indented under their parent."""
+    spans = tl.get("spans", [])
+    t0 = tl.get("start") or (spans[0]["start"] if spans else 0.0)
+    print(f"trace {tl.get('trace_id')} job {tl.get('job_id')} "
+          f"({len(spans)} spans)")
+    depth = {}
+    for sp in spans:
+        depth[sp["span_id"]] = depth.get(sp.get("parent_id"), -1) + 1
+        indent = "  " * depth[sp["span_id"]]
+        off = sp["start"] - t0
+        dur = sp.get("duration_s")
+        dur_s = "  [open]" if dur is None else f"{dur * 1000:8.1f}ms"
+        mark = "*" if sp.get("kind") == "event" else "-"
+        status = "" if sp.get("status") == "ok" else f"  !{sp['status']}"
+        attrs = sp.get("attrs") or {}
+        extra = " ".join(f"{k}={v}" for k, v in sorted(attrs.items())
+                         if k not in ("job_id",))
+        print(f"  +{off:7.3f}s {dur_s} {indent}{mark} {sp['name']}"
+              f"{status}" + (f"  ({extra})" if extra else ""))
+    events = tl.get("cluster_events", [])
+    if events:
+        print(f"cluster events overlapping this job ({len(events)}):")
+        for ev in events:
+            attrs = ev.get("attrs") or {}
+            extra = " ".join(f"{k}={v}"
+                             for k, v in sorted(attrs.items()))
+            print(f"  +{ev['start'] - t0:7.3f}s * {ev['name']}  "
+                  f"({extra})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(prog="dlaas")
     ap.add_argument("--url", default="http://127.0.0.1:8080")
@@ -97,13 +136,20 @@ def main(argv=None):
                         "key returns the original training")
     tsub.add_parser("list")
     for name in ("status", "logs", "delete", "download", "rescale",
-                 "perf"):
+                 "perf", "timeline"):
         p = tsub.add_parser(name)
         p.add_argument("--id", required=True)
         if name == "download":
             p.add_argument("--out", required=True)
         if name == "logs":
-            p.add_argument("--follow", action="store_true")
+            p.add_argument("--follow", "-f", action="store_true")
+            p.add_argument("--max-s", type=float, default=5.0,
+                           dest="max_s",
+                           help="follow window in seconds (default 5)")
+        if name == "timeline":
+            p.add_argument("--json", action="store_true",
+                           help="raw timeline JSON instead of the "
+                                "rendered span tree")
 
     sv = sub.add_parser("serve")
     svsub = sv.add_subparsers(dest="sub", required=True)
@@ -135,6 +181,7 @@ def main(argv=None):
                            help="per-request deadline in seconds")
 
     sub.add_parser("queue")
+    sub.add_parser("metrics")
 
     cl = sub.add_parser("cluster")
     clsub = cl.add_subparsers(dest="sub", required=True)
@@ -193,15 +240,37 @@ def main(argv=None):
                               token=args.token), indent=1))
     elif args.cmd == "train" and args.sub == "logs":
         if args.follow:
+            # tail the structured live stream: NDJSON records off the
+            # job's log-hub tap, rendered one line per record
             req = urllib.request.Request(
-                f"{base}/v1/trainings/{args.id}/logs/stream")
+                f"{base}/v1/trainings/{args.id}/logs"
+                f"?follow=1&max_s={args.max_s}")
             with urllib.request.urlopen(req) as r:
-                for line in r:
-                    sys.stdout.write(line.decode())
+                for raw in r:
+                    raw = raw.strip()
+                    if not raw:
+                        continue
+                    try:
+                        rec = json.loads(raw)
+                    except json.JSONDecodeError:
+                        sys.stdout.write(raw.decode() + "\n")
+                        continue
+                    sys.stdout.write(
+                        f"[{rec.get('level', '-')}] "
+                        f"{rec.get('member', '-')}: "
+                        f"{rec.get('line', '')}\n")
+                    sys.stdout.flush()
         else:
             out = _req(f"{base}/v1/trainings/{args.id}/logs",
                        token=args.token)
             print("\n".join(out.get("logs", [])))
+    elif args.cmd == "train" and args.sub == "timeline":
+        tl = _req(f"{base}/v1/trainings/{args.id}/timeline",
+                  token=args.token)
+        if args.json:
+            print(json.dumps(tl, indent=1))
+        else:
+            _render_timeline(tl)
     elif args.cmd == "train" and args.sub == "perf":
         print(json.dumps(_req(f"{base}/v1/trainings/{args.id}/perf",
                               token=args.token), indent=1))
@@ -247,6 +316,11 @@ def main(argv=None):
     elif args.cmd == "queue":
         print(json.dumps(_req(f"{base}/v1/queue", token=args.token),
                          indent=1))
+    elif args.cmd == "metrics":
+        req = urllib.request.Request(f"{base}/metrics")
+        req.add_header("Authorization", f"Bearer {args.token}")
+        with urllib.request.urlopen(req) as r:
+            sys.stdout.write(r.read().decode())
     elif args.cmd == "recovery":
         print(json.dumps(_req(f"{base}/v1/recovery", token=args.token),
                          indent=1))

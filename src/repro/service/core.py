@@ -23,8 +23,8 @@ from __future__ import annotations
 import hashlib
 import itertools
 import json
+import logging
 import os
-import sys
 import tempfile
 import threading
 import time
@@ -32,6 +32,10 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.observability.export import prometheus_text as _prom_text
+from repro.observability.log import (JobLogHub, register_hub,
+                                     setup_logging, unregister_hub)
+from repro.observability.trace import Tracer, TraceStore
 from repro.platform.cluster import Cluster, Node, Resources, Scheduler
 from repro.platform.journal import Journal
 from repro.platform.lcm import JobSpec, LifecycleManager
@@ -47,6 +51,8 @@ from repro.service.manifest import (parse_manifest, resolve_distribution,
                                     resolve_framework, validate_manifest)
 from repro.serving.engine import DeadlineExceeded
 from repro.serving.endpoint import ModelEndpoint
+
+log = logging.getLogger("repro.core")
 
 
 def default_cluster(n_nodes: int = 8, gpus_per_node: int = 4) -> Cluster:
@@ -73,8 +79,8 @@ def _enable_jax_compile_cache():
         jax.config.update("jax_persistent_cache_min_compile_time_secs",
                           0.5)
     except Exception as e:                     # cache is best-effort
-        print(f"[core] jax compile cache unavailable: "
-              f"{type(e).__name__}: {e}", file=sys.stderr)
+        log.warning("jax compile cache unavailable: %s: %s",
+                    type(e).__name__, e)
 
 
 class DLaaSCore:
@@ -102,8 +108,23 @@ class DLaaSCore:
             self.autoscaler = Autoscaler(self.scheduler, **kw)
             self.scheduler.autoscaler = self.autoscaler
         self._transition_idx = 0      # cluster log -> metrics mirror
-        self.lcm = LifecycleManager(self.zk, self.scheduler)
         self.metrics = MetricsService()
+        # observability plane: structured logging, a per-job log hub the
+        # REST streams tail, and the tracer every layer records into.
+        # Span latencies mirror into platform histograms so /metrics
+        # exposes them without a second collection path.
+        setup_logging()
+        self.loghub = JobLogHub()
+        register_hub(self.loghub)
+        self.trace_store = TraceStore()
+
+        def _span_done(sp, _m=self.metrics):
+            _m.observe("platform", f"span_{sp.name}_seconds",
+                       max(0.0, (sp.end or sp.start) - sp.start))
+
+        self.tracer = Tracer(self.trace_store, on_span_end=_span_done)
+        self.lcm = LifecycleManager(self.zk, self.scheduler,
+                                    tracer=self.tracer)
         self.log_parser = LogParserService(self.metrics)
         self.storage = StorageManager()
         self.workdir = workdir
@@ -149,6 +170,7 @@ class DLaaSCore:
     def close(self):
         self._stop.set()
         self._ticker.join(timeout=2)
+        unregister_hub(self.loghub)
         self.zk.detach_journal()
 
     def crash(self):
@@ -161,6 +183,7 @@ class DLaaSCore:
         self.zk.detach_journal()
         self._stop.set()
         self.crashed = True
+        unregister_hub(self.loghub)
         for app in list(self.scheduler.apps.values()):
             for t in list(app.tasks.values()):
                 t.preempt_event.set()
@@ -197,10 +220,10 @@ class DLaaSCore:
 
     def _tick_error(self, context: str, exc: Exception):
         """Scheduler/monitor bugs must be diagnosable, not swallowed:
-        mirror them to stderr (with job context) and into the metrics
-        event stream the log tooling reads. Deduplicated per context —
-        the tick loop runs ~50x/s, so a persistently failing monitor
-        must not grow the event log without bound."""
+        mirror them to the structured log (with job context) and into
+        the metrics event stream the log tooling reads. Deduplicated per
+        context — the tick loop runs ~50x/s, so a persistently failing
+        monitor must not grow the event log without bound."""
         # dedup on exception type, not message text: messages may embed
         # varying values (reprs, counters) that would defeat the dedup
         kind = type(exc).__name__
@@ -208,12 +231,12 @@ class DLaaSCore:
             return
         self._tick_errors[context] = kind
         msg = f"{kind}: {exc}"
-        print(f"[tick-loop] {context}: {msg}", file=sys.stderr)
+        log.error("tick-loop %s: %s", context, msg,
+                  extra={"job_id": context})
         try:
             self.metrics.event(context, "tick_error", -1, error=msg)
         except Exception as e:
-            print(f"[tick-loop] metrics event failed: {e}",
-                  file=sys.stderr)
+            log.error("tick-loop metrics event failed: %s", e)
 
     def _meter(self, user: str):
         self.usage[user] = self.usage.get(user, 0) + 1
@@ -260,16 +283,20 @@ class DLaaSCore:
 
     def _mirror_transitions(self):
         """Mirror new node-lifecycle transitions into the metrics
-        service (counters + event stream under the 'cluster' job id)."""
-        log = self.cluster.transitions
-        new = log[self._transition_idx:]
-        self._transition_idx = len(log)
+        service (counters + event stream under the 'cluster' job id)
+        and the cluster trace (folded into overlapping job timelines)."""
+        tlog = self.cluster.transitions
+        new = tlog[self._transition_idx:]
+        self._transition_idx = len(tlog)
         for tick, node, prev, state, reason in new:
             self.metrics.incr("cluster", "node_transitions_total")
             self.metrics.incr("cluster", f"node_to_{state.lower()}")
             self.metrics.event("cluster", "node_transition", tick,
                                node=node, prev=prev, state=state,
                                reason=reason)
+            self.tracer.event("cluster", "node_transition", tick=tick,
+                              node=node, prev=prev, state=state,
+                              reason=reason)
 
     # ----------------------------------------------------------------- cluster
     def cluster_status(self) -> Dict:
@@ -321,7 +348,8 @@ class DLaaSCore:
             sched = FaultSchedule(events)
         self.scheduler.faults = FaultInjector(sched, lcm=self.lcm,
                                               metrics=self.metrics,
-                                              core=self)
+                                              core=self,
+                                              tracer=self.tracer)
         return {"scheduled": [e.describe() for e in sched]}
 
     # ----------------------------------------------------------------- tenants
@@ -470,6 +498,12 @@ class DLaaSCore:
             if not rec or rec.get("kind") != "training":
                 continue
             state = self.lcm.job_state(jid)
+            # re-bind the submission-time trace id so the job's timeline
+            # continues in the same trace across the crash
+            self.tracer.register_job(jid, rec.get("trace_id"))
+            self.tracer.event(jid, "recovery", state=state)
+            if state in ("COMPLETED", "FAILED", "KILLED"):
+                self.tracer.job_state_change(jid, state)
             base = {"training_id": jid, "model_id": rec["model_id"],
                     "user": rec["user"], "tenant": rec["tenant"],
                     "priority": rec["priority"], "backend": rec["backend"],
@@ -493,12 +527,15 @@ class DLaaSCore:
                 try:
                     self._relaunch_training(jid, rec)
                 except Exception as e:
-                    print(f"[recovery] relaunch {jid} failed: "
-                          f"{type(e).__name__}: {e}", file=sys.stderr)
+                    log.error("recovery relaunch %s failed: %s: %s",
+                              jid, type(e).__name__, e,
+                              extra={"job_id": jid})
                     with self._lock:
                         self.trainings[jid] = base
                     rep["trainings"]["abandoned"].append(jid)
                     continue
+                self.tracer.event(jid, "relaunch",
+                                  resumed_from_checkpoint=has_ckpt)
                 rep["trainings"]["resumed" if has_ckpt
                                  else "requeued"].append(jid)
         for jid in jobs:
@@ -510,11 +547,15 @@ class DLaaSCore:
                 rep["endpoints"]["abandoned"].append(jid)
                 continue
             self.lcm.clear_runtime_state(jid)
+            self.tracer.register_job(jid, rec.get("trace_id"))
+            self.tracer.event(jid, "recovery",
+                              state=self.lcm.job_state(jid))
             try:
                 self._launch_endpoint(jid, rec["args"], rec["user"])
             except Exception as e:
-                print(f"[recovery] redeploy {jid} failed: "
-                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                log.error("recovery redeploy %s failed: %s: %s",
+                          jid, type(e).__name__, e,
+                          extra={"job_id": jid})
                 rep["endpoints"]["abandoned"].append(jid)
                 continue
             rep["endpoints"]["redeployed"].append(jid)
@@ -554,6 +595,12 @@ class DLaaSCore:
             self._idem_complete(irec["key"], kind, jid, resp)
             rep["idempotency"]["completed"] += 1
         self.recovery = rep
+        self.tracer.event(
+            "cluster", "recovery",
+            journal_records=rep["journal"].get("records", 0),
+            resumed=len(rep["trainings"]["resumed"]),
+            requeued=len(rep["trainings"]["requeued"]),
+            redeployed=len(rep["endpoints"]["redeployed"]))
         m = self.metrics
         m.incr("platform", "recoveries_total")
         m.incr("platform", "recovery_journal_records",
@@ -586,8 +633,10 @@ class DLaaSCore:
                               ).rstrip("MiB") or 1024),
             tenant=rec["tenant"], priority=rec["priority"])
         ctx = BackendContext(zk=self.zk, storage=self.storage,
-                             metrics=self.metrics, workdir=self.workdir)
+                             metrics=self.metrics, workdir=self.workdir,
+                             tracer=self.tracer, loghub=self.loghub)
         plan = backend.plan(spec, manifest, ctx)
+        plan.meta["trace_id"] = self.tracer.trace_of(job_id)
         trec = {"training_id": job_id, "model_id": rec["model_id"],
                 "user": rec["user"], "tenant": rec["tenant"],
                 "priority": rec["priority"], "created": rec["created"],
@@ -678,31 +727,51 @@ class DLaaSCore:
         priority = int(priority if priority is not None
                        else manifest.get("priority", 0))
         job_id = f"training-{next(self._job_seq):05d}"
-        # the execution backend owns *how* the job runs (software-PS
-        # learner threads vs. a pjit SPMD gang); the service only picks
-        # it from the manifest and hands over a resource envelope
-        backend = get_backend(resolve_distribution(manifest))
-        spec = JobSpec(
-            job_id=job_id,
-            learners=int(manifest.get("learners", 1)),
-            gpus_per_learner=int(manifest.get("gpus", 1)),
-            memory_mb=int(str(manifest.get("memory", "1024MiB")
-                              ).rstrip("MiB") or 1024),
-            tenant=tenant, priority=priority)
-        ctx = BackendContext(zk=self.zk, storage=self.storage,
-                             metrics=self.metrics, workdir=self.workdir)
-        plan = backend.plan(spec, manifest, ctx)
-        # admission control: reject before any job state is created.
-        # Demand covers the whole plan (learners AND the PS app, or the
-        # full pjit gang), so deploy can never fail quota mid-way and
-        # the gang can always place concurrently within quota.
-        self.scheduler.check_admission(tenant, plan.total_resources())
+        # the trace starts at submission; its id is persisted with the
+        # job record so a recovered core continues the same trace
+        trace_id = self.tracer.register_job(job_id)
+        submit_sp = self.tracer.start(job_id, "submit",
+                                      model_id=model_id, tenant=tenant,
+                                      user=user)
+        try:
+            # the execution backend owns *how* the job runs (software-PS
+            # learner threads vs. a pjit SPMD gang); the service only
+            # picks it from the manifest and hands over a resource
+            # envelope
+            backend = get_backend(resolve_distribution(manifest))
+            spec = JobSpec(
+                job_id=job_id,
+                learners=int(manifest.get("learners", 1)),
+                gpus_per_learner=int(manifest.get("gpus", 1)),
+                memory_mb=int(str(manifest.get("memory", "1024MiB")
+                                  ).rstrip("MiB") or 1024),
+                tenant=tenant, priority=priority)
+            ctx = BackendContext(zk=self.zk, storage=self.storage,
+                                 metrics=self.metrics,
+                                 workdir=self.workdir,
+                                 tracer=self.tracer, loghub=self.loghub)
+            with self.tracer.span(job_id, "plan", backend=backend.name):
+                plan = backend.plan(spec, manifest, ctx)
+            plan.meta["trace_id"] = trace_id
+            # admission control: reject before any job state is created.
+            # Demand covers the whole plan (learners AND the PS app, or
+            # the full pjit gang), so deploy can never fail quota
+            # mid-way and the gang can always place concurrently within
+            # quota.
+            with self.tracer.span(job_id, "admission", tenant=tenant):
+                self.scheduler.check_admission(tenant,
+                                               plan.total_resources())
+        except Exception as e:
+            self.tracer.end(submit_sp, status="error",
+                            error=type(e).__name__)
+            raise
         # crash-safe ordering: reserve the idempotency key (with the
         # pre-allocated id), THEN persist the job record, then launch.
         # A crash after the reservation but before the record replays to
         # a droppable pending marker; after the record, to this job.
         if idempotency_key is not None and \
                 not self._idem_reserve(idempotency_key, "training", job_id):
+            self.tracer.end(submit_sp, status="error", error="idem-race")
             prev = self._idem_check(idempotency_key)
             if prev is None:
                 raise ValueError("concurrent request with the same "
@@ -714,7 +783,8 @@ class DLaaSCore:
                        {"kind": "training", "model_id": model_id,
                         "manifest": manifest, "user": user,
                         "tenant": tenant, "priority": priority,
-                        "backend": backend.name, "created": created})
+                        "backend": backend.name, "created": created,
+                        "trace_id": trace_id})
             rec = {"training_id": job_id, "model_id": model_id,
                    "user": user, "tenant": tenant, "priority": priority,
                    "created": created, "backend": backend.name,
@@ -722,6 +792,9 @@ class DLaaSCore:
                    "plan": plan, "spec": spec}
             with self._lock:
                 self.trainings[job_id] = rec
+            # submission ends where the queue phase begins: launch's
+            # first LCM state write (QUEUED) opens queue_wait
+            self.tracer.end(submit_sp)
             try:
                 rec["handle"] = backend.launch(plan, self.lcm)
             except QuotaExceeded:
@@ -735,7 +808,9 @@ class DLaaSCore:
                 except NoNodeError:
                     pass
                 raise
-        except Exception:
+        except Exception as e:
+            self.tracer.end(submit_sp, status="error",
+                            error=type(e).__name__)
             self._idem_abort(idempotency_key)
             raise
         resp = {"training_id": job_id, "tenant": tenant,
@@ -873,6 +948,43 @@ class DLaaSCore:
     def training_metrics(self, job_id: str) -> str:
         return self.metrics.to_json(job_id)
 
+    # ------------------------------------------------------- observability
+    def _known_job(self, job_id: str) -> bool:
+        with self._lock:
+            if job_id in self.trainings or job_id in self.endpoints:
+                return True
+        return self.tracer.has_trace(job_id)
+
+    def training_timeline(self, job_id: str) -> Dict:
+        """The job's merged trace timeline — lifecycle phase spans,
+        instrumentation spans, recovery/relaunch events, plus the
+        overlapping slice of cluster events (GET
+        /v1/trainings/<id>/timeline, ``dlaas train timeline``)."""
+        if not self._known_job(job_id):
+            raise KeyError(job_id)
+        self.tracer.trace_of(job_id)   # pre-observability record: mint
+        return self.tracer.timeline(job_id)
+
+    def prometheus_text(self) -> str:
+        """Platform-wide metrics in Prometheus text exposition format
+        (GET /metrics)."""
+        return _prom_text(self)
+
+    def log_stream(self, job_id: str):
+        """Structured-log tail + live subscription for streaming
+        (``?follow=1``). Caller must ``loghub.unsubscribe`` the returned
+        stream when the client disconnects."""
+        if not self._known_job(job_id):
+            raise KeyError(job_id)
+        return self.loghub.tail(job_id), self.loghub.subscribe(job_id)
+
+    def metric_stream(self, job_id: str):
+        """Live metric-record subscription for streaming. Caller must
+        ``metrics.unsubscribe_stream`` it when done."""
+        if not self._known_job(job_id):
+            raise KeyError(job_id)
+        return self.metrics.stream(job_id)
+
     def download_model(self, job_id: str) -> bytes:
         return self.storage.download("results", job_id,
                                      "trained_model.npy")
@@ -959,6 +1071,9 @@ class DLaaSCore:
         first deployment and crash-recovery re-deploy (same endpoint id,
         args straight from the persisted record)."""
         backend = get_backend("serving")
+        # first deploy mints a trace here; recovery re-registered the
+        # persisted id already, so trace_of returns it unchanged
+        trace_id = self.tracer.trace_of(endpoint_id)
         spec = JobSpec(job_id=endpoint_id, learners=1,
                        gpus_per_learner=int(args["gpus"]),
                        memory_mb=int(args["memory_mb"]),
@@ -974,13 +1089,18 @@ class DLaaSCore:
                         "eos_id": args["eos_id"],
                         "seed": int(args["seed"])}}
         ctx = BackendContext(zk=self.zk, storage=self.storage,
-                             metrics=self.metrics, workdir=self.workdir)
-        plan = backend.plan(spec, manifest, ctx)
-        self.scheduler.check_admission(args["tenant"],
-                                       plan.total_resources())
+                             metrics=self.metrics, workdir=self.workdir,
+                             tracer=self.tracer, loghub=self.loghub)
+        with self.tracer.span(endpoint_id, "plan", backend="serving"):
+            plan = backend.plan(spec, manifest, ctx)
+        plan.meta["trace_id"] = trace_id
+        with self.tracer.span(endpoint_id, "admission",
+                              tenant=args["tenant"]):
+            self.scheduler.check_admission(args["tenant"],
+                                           plan.total_resources())
         self._zset(f"/dlaas/jobs/{endpoint_id}/record",
                    {"kind": "endpoint", "args": args, "user": user,
-                    "created": time.time()})
+                    "created": time.time(), "trace_id": trace_id})
         ep = ModelEndpoint(endpoint_id, plan, user=user)
         with self._lock:
             self.endpoints[endpoint_id] = ep

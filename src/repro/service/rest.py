@@ -41,9 +41,28 @@ Endpoints (v1):
                                          compression ratio, fused
                                          aggregation ms/round)
   DELETE /v1/trainings/<id>              terminate
-  GET    /v1/trainings/<id>/logs         collected logs
+  GET    /v1/trainings/<id>/logs         collected logs + structured tail
+  GET    /v1/trainings/<id>/logs?follow=1   chunked NDJSON live log
+                                         stream off the job's log-hub
+                                         tap (tail replay + live records,
+                                         deduped by seq; max_s= bounds
+                                         the follow window)
   GET    /v1/trainings/<id>/logs/stream  chunked live stream (websocket
                                          analogue of the visualization API)
+  GET    /v1/trainings/<id>/timeline     merged trace timeline: lifecycle
+                                         phase spans (queue_wait/place/
+                                         run), instrumentation spans
+                                         (plan/step/checkpoint_publish),
+                                         recovery events + overlapping
+                                         cluster events
+  GET    /v1/trainings/<id>/metrics?follow=1  chunked NDJSON live metric
+                                         stream (snapshot line, then
+                                         records off the metrics tap)
+  GET    /metrics                        whole-platform Prometheus text
+                                         exposition (queue depths, node
+                                         states, span latencies, journal
+                                         + autotune counters, per-job
+                                         metrics)
   GET    /v1/trainings/<id>/perf         roofline estimate: bound,
                                          attainable vs measured rate
   GET    /v1/trainings/<id>/metrics      common JSON-list metric format
@@ -79,10 +98,12 @@ instead of creating — or billing — a duplicate. Stdlib-only
 from __future__ import annotations
 
 import json
+import sys
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
+from urllib.parse import parse_qs, urlsplit
 
 from repro.platform.cluster import UserError
 from repro.platform.queue import QuotaExceeded
@@ -122,13 +143,21 @@ class _Handler(BaseHTTPRequestHandler):
     def log_message(self, *a):  # quiet
         pass
 
+    def _route(self):
+        """Path segments + a flat query dict (the path may carry
+        ``?follow=1`` etc. — never route on the raw self.path)."""
+        url = urlsplit(self.path)
+        parts = [p for p in url.path.split("/") if p]
+        query = {k: v[-1] for k, v in parse_qs(url.query).items()}
+        return parts, query
+
     # ---- routing -----------------------------------------------------------
     def do_POST(self):
         user = _user_of(self)
         # client-supplied submission key: replaying the same request
         # (same key) returns the original job instead of a duplicate
         idem = self.headers.get("Idempotency-Key") or None
-        parts = [p for p in self.path.split("/") if p]
+        parts, _ = self._route()
         try:
             if len(parts) == 4 and parts[:2] == ["v1", "models"] \
                     and parts[3] == "predict":
@@ -213,8 +242,19 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_GET(self):
         user = _user_of(self)
-        parts = [p for p in self.path.split("/") if p]
+        parts, query = self._route()
+        follow = query.get("follow", "") in ("1", "true", "yes")
         try:
+            if parts == ["metrics"]:
+                body = self.core.prometheus_text().encode()
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type",
+                    "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
             if parts == ["v1", "models"]:
                 rows = [{**r, "kind": "manifest"}
                         for r in self.core.list_models(user)]
@@ -232,14 +272,25 @@ class _Handler(BaseHTTPRequestHandler):
             if len(parts) == 3 and parts[:2] == ["v1", "trainings"]:
                 return self._json(self.core.training_status(parts[2]))
             if len(parts) == 4 and parts[3] == "logs":
+                if follow:
+                    return self._follow_logs(
+                        parts[2],
+                        max_s=min(float(query.get("max_s", 5.0)), 60.0))
                 return self._json(
-                    {"logs": self.core.training_logs(parts[2])})
+                    {"logs": self.core.training_logs(parts[2]),
+                     "structured": self.core.loghub.tail(parts[2])})
+            if len(parts) == 4 and parts[3] == "timeline":
+                return self._json(self.core.training_timeline(parts[2]))
             if len(parts) == 4 and parts[3] == "perf":
                 return self._json(self.core.training_perf(parts[2]))
             if len(parts) == 5 and parts[3] == "logs" \
                     and parts[4] == "stream":
                 return self._stream_logs(parts[2])
             if len(parts) == 4 and parts[3] == "metrics":
+                if follow:
+                    return self._follow_metrics(
+                        parts[2],
+                        max_s=min(float(query.get("max_s", 5.0)), 60.0))
                 body = self.core.training_metrics(parts[2]).encode()
                 self.send_response(200)
                 self.send_header("Content-Type", "application/json")
@@ -273,7 +324,7 @@ class _Handler(BaseHTTPRequestHandler):
             return self._err(500, f"{type(e).__name__}: {e}")
 
     def do_DELETE(self):
-        parts = [p for p in self.path.split("/") if p]
+        parts, _ = self._route()
         try:
             if len(parts) == 3 and parts[1] == "models":
                 if parts[2] in self.core.endpoints:
@@ -289,33 +340,96 @@ class _Handler(BaseHTTPRequestHandler):
         except KeyError as e:
             return self._err(404, str(e))
 
-    # ---- live log streaming (chunked; websocket analogue) ------------------
-    def _stream_logs(self, job_id: str, max_s: float = 5.0):
+    # ---- live streaming (chunked; websocket analogue) ----------------------
+    def _start_chunked(self, ctype: str):
         self.send_response(200)
-        self.send_header("Content-Type", "text/plain")
+        self.send_header("Content-Type", ctype)
         self.send_header("Transfer-Encoding", "chunked")
         self.end_headers()
 
-        def chunk(data: bytes):
-            self.wfile.write(f"{len(data):X}\r\n".encode())
-            self.wfile.write(data + b"\r\n")
-            self.wfile.flush()
+    def _chunk(self, data: bytes):
+        if not data:
+            return
+        self.wfile.write(f"{len(data):X}\r\n".encode())
+        self.wfile.write(data + b"\r\n")
+        self.wfile.flush()
 
+    def _end_chunked(self):
+        # final zero-length chunk per RFC
+        self.wfile.write(b"0\r\n\r\n")
+        self.wfile.flush()
+
+    def _terminal(self, job_id: str) -> bool:
+        return self.core.lcm.job_state(job_id) in ("COMPLETED",
+                                                   "FAILED", "KILLED")
+
+    def _stream_logs(self, job_id: str, max_s: float = 5.0):
+        """Legacy znode-log polling stream (logs/stream route)."""
+        self._start_chunked("text/plain")
         sent = 0
         t0 = time.time()
         while time.time() - t0 < max_s:
             logs = self.core.training_logs(job_id)
             for line in logs[sent:]:
-                chunk((line + "\n").encode())
+                self._chunk((line + "\n").encode())
             sent = len(logs)
-            st = self.core.lcm.job_state(job_id)
-            if st in ("COMPLETED", "FAILED", "KILLED"):
+            if self._terminal(job_id):
                 break
             time.sleep(0.05)
-        chunk(b"")  # terminator is written below
-        # final zero-length chunk per RFC
-        self.wfile.write(b"0\r\n\r\n")
-        self.wfile.flush()
+        self._end_chunked()
+
+    def _follow_logs(self, job_id: str, max_s: float = 5.0):
+        """``logs?follow=1``: replay the structured tail, then stream
+        live records off the job's log-hub tap as NDJSON. Tail and live
+        stream are deduped by the per-job ``seq``."""
+        try:
+            tail, stream = self.core.log_stream(job_id)
+        except KeyError:
+            return self._err(404, f"no such job: {job_id!r}")
+        self._start_chunked("application/x-ndjson")
+        last_seq = 0
+        try:
+            for rec in tail:
+                self._chunk((json.dumps(rec) + "\n").encode())
+                last_seq = rec.get("seq", 0)
+            t0 = time.time()
+            while time.time() - t0 < max_s:
+                rec = stream.get(timeout=0.2)
+                if rec is None:
+                    if stream.closed or self._terminal(job_id):
+                        break
+                    continue
+                if rec.get("seq", 0) <= last_seq:
+                    continue        # already replayed from the tail
+                self._chunk((json.dumps(rec) + "\n").encode())
+        finally:
+            self.core.loghub.unsubscribe(job_id, stream)
+        self._end_chunked()
+
+    def _follow_metrics(self, job_id: str, max_s: float = 5.0):
+        """``metrics?follow=1``: one snapshot line (the series so far),
+        then live metric/event records as NDJSON."""
+        try:
+            stream = self.core.metric_stream(job_id)
+        except KeyError:
+            return self._err(404, f"no such job: {job_id!r}")
+        self._start_chunked("application/x-ndjson")
+        try:
+            snap = {"type": "snapshot",
+                    "metrics": json.loads(
+                        self.core.training_metrics(job_id))}
+            self._chunk((json.dumps(snap) + "\n").encode())
+            t0 = time.time()
+            while time.time() - t0 < max_s:
+                rec = stream.get(timeout=0.2)
+                if rec is None:
+                    if stream.closed or self._terminal(job_id):
+                        break
+                    continue
+                self._chunk((json.dumps(rec) + "\n").encode())
+        finally:
+            self.core.metrics.unsubscribe_stream(job_id, stream)
+        self._end_chunked()
 
 
 class DLaaSServer:
@@ -350,7 +464,8 @@ class DLaaSServer:
 
 def serve(workdir: str, port: int = 8080):  # pragma: no cover
     srv = DLaaSServer(workdir, port).start()
-    print(f"DLaaS listening on {srv.url}")
+    sys.stdout.write(f"DLaaS listening on {srv.url}\n")
+    sys.stdout.flush()
     try:
         while True:
             time.sleep(1)
@@ -359,6 +474,5 @@ def serve(workdir: str, port: int = 8080):  # pragma: no cover
 
 
 if __name__ == "__main__":  # pragma: no cover
-    import sys
     serve(sys.argv[1] if len(sys.argv) > 1 else "/tmp/dlaas",
           int(sys.argv[2]) if len(sys.argv) > 2 else 8080)

@@ -23,7 +23,7 @@ download and serves fresh init weights (load/bench path).
 from __future__ import annotations
 
 import io
-import sys
+import logging
 import time
 from typing import Dict, Optional
 
@@ -32,6 +32,7 @@ import numpy as np
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs.base import reduce_for_smoke
 from repro.configs.registry import get_arch
+from repro.observability.trace import maybe_span
 from repro.platform.cluster import Resources
 from repro.platform.lcm import (COMPLETED, ExecutionPlan, FAILED_J,
                                 JobControl, JobSpec, KILLED_J, TaskGroup)
@@ -40,6 +41,8 @@ from repro.platform.watchdog import DOWNLOADING
 from repro.runtime.backend import (BackendContext, ExecutionBackend,
                                    register_backend)
 from repro.serving.engine import InferenceEngine
+
+log = logging.getLogger("repro.serving")
 
 # endpoint states
 DEPLOYING_E, READY_E, DRAINING_E, STOPPED_E, FAILED_E = (
@@ -66,9 +69,8 @@ def load_flat_weights(storage: StorageManager, job_id: str,
                     last, {"flat": np.zeros(expect_size, np.float32)})
                 return np.asarray(tree["flat"])
             except Exception as e:    # e.g. pjit pytree checkpoint layout
-                print(f"[serving] checkpoint fallback for {job_id} "
-                      f"unusable: {type(e).__name__}: {e}",
-                      file=sys.stderr)
+                log.warning("checkpoint fallback for %s unusable: "
+                            "%s: %s", job_id, type(e).__name__, e)
     raise StorageError(f"no trained weights found for job {job_id!r}")
 
 
@@ -83,10 +85,12 @@ def make_server_body(engine: InferenceEngine, source_training,
         flat = None
         if source_training:
             wd.set_status(DOWNLOADING)
-            flat = load_flat_weights(
-                ctx.storage, source_training,
-                ckpt_dir=f"{ctx.workdir}/ckpt/{source_training}",
-                expect_size=engine.flat_size)
+            with maybe_span(ctx.tracer, engine.endpoint_id,
+                            "weights_download", source=source_training):
+                flat = load_flat_weights(
+                    ctx.storage, source_training,
+                    ckpt_dir=f"{ctx.workdir}/ckpt/{source_training}",
+                    expect_size=engine.flat_size)
         engine.start(flat)
         wd.set_status("SERVING")
         wd.log(f"endpoint ready: capacity={engine.capacity} "
@@ -125,7 +129,8 @@ class ServingBackend(ExecutionBackend):
             default_max_new=max_new,
             eos_id=srv.get("eos_id"),
             seed=int(srv.get("seed", 0)),
-            metrics=ctx.metrics, endpoint_id=spec.job_id)
+            metrics=ctx.metrics, endpoint_id=spec.job_id,
+            tracer=ctx.tracer)
         source = manifest.get("source_training")
         control = JobControl()
         body = make_server_body(engine, source, ctx, control)

@@ -23,7 +23,7 @@ keeps the engine deterministic.
 from __future__ import annotations
 
 import collections
-import sys
+import logging
 import threading
 import time
 import uuid
@@ -37,9 +37,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import Dist
 from repro.models import make_model
+from repro.observability.trace import TRACE_STEP_SAMPLE, maybe_span
 from repro.platform.cluster import UserError
 from repro.platform.metrics import MetricsService
 from repro.runtime.learner import _flat_io
+
+log = logging.getLogger("repro.serving")
+job_log = logging.getLogger("repro.job")
 
 # decode-friendly jit options (smoke-scale: tiny chunks, no remat)
 ENGINE_OPTS = {"remat": "none", "xent_chunk": 32, "q_chunk": 32,
@@ -94,7 +98,7 @@ class InferenceEngine:
                  max_seq: int = 64, max_queue: int = 16,
                  default_max_new: int = 16, eos_id: Optional[int] = None,
                  seed: int = 0, metrics: Optional[MetricsService] = None,
-                 endpoint_id: str = "endpoint"):
+                 endpoint_id: str = "endpoint", tracer=None):
         if cfg.family == "encdec":
             raise UserError(
                 "serving supports decoder-family archs only (dense/moe/"
@@ -111,6 +115,8 @@ class InferenceEngine:
         self.seed = int(seed)
         self.metrics = metrics
         self.endpoint_id = endpoint_id
+        self.tracer = tracer
+        self._req_spans: Dict[str, object] = {}  # req_id -> open span
 
         self._lock = threading.RLock()
         self._queue: collections.deque = collections.deque()
@@ -282,6 +288,12 @@ class InferenceEngine:
                     f"admission queue full ({self.max_queue} waiting)")
             self._queue.append(req)
             depth = len(self._queue)
+            if self.tracer is not None:
+                # per-request span in the endpoint's trace: admission
+                # to settle, closed in _settle with the final status
+                self._req_spans[req.req_id] = self.tracer.start(
+                    self.endpoint_id, "request", req_id=req.req_id,
+                    plen=int(prompt.size), max_new=max_new)
         self._gauge("queue_depth", depth)
         self._wake.set()
         return req
@@ -406,7 +418,10 @@ class InferenceEngine:
                 depth = len(self._queue)
             self._gauge("queue_depth", depth)
             toks = jnp.asarray(np.stack([r.prompt for r in batch]))
-            logits, c1 = self._prefill(self.params, {"tokens": toks})
+            with maybe_span(self.tracer, self.endpoint_id, "prefill",
+                            n=len(batch), plen=int(plen)):
+                logits, c1 = self._prefill(self.params,
+                                           {"tokens": toks})
             c1 = self._pad_prefill(c1)
             first = np.asarray(
                 jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
@@ -451,6 +466,10 @@ class InferenceEngine:
             self._last_decode_t = now
         self._gauge("batch_occupancy", live / self.capacity,
                     step=self._decode_steps)
+        if (self.tracer is not None
+                and self._decode_steps % TRACE_STEP_SAMPLE == 0):
+            self.tracer.event(self.endpoint_id, "decode",
+                              step=self._decode_steps, live=live)
         return live
 
     def _maybe_retire(self, slot: int, req: InferenceRequest, now: float):
@@ -502,6 +521,15 @@ class InferenceEngine:
                 self._incr("expired_total")
             elif status == R_FAILED:
                 self._incr("failed_total")
+            span = self._req_spans.pop(req.req_id, None)
+        if span is not None:
+            self.tracer.end(span,
+                            status=("ok" if status == R_DONE
+                                    else "error"),
+                            result=status, tokens=len(req.tokens))
+        job_log.debug("request %s %s tokens=%d latency=%.4fs",
+                      req.req_id, status, len(req.tokens), lat,
+                      extra={"job_id": self.endpoint_id})
         req.done.set()
 
     def _incr(self, counter: str, value: float = 1.0):
@@ -510,8 +538,7 @@ class InferenceEngine:
             try:
                 self.metrics.incr(self.endpoint_id, counter, value)
             except Exception as e:           # accounting must not kill serving
-                print(f"[serving] metrics incr failed: {e}",
-                      file=sys.stderr)
+                log.warning("metrics incr failed: %s", e)
 
     def _gauge(self, metric: str, value: float,
                step: Optional[int] = None):
@@ -524,8 +551,7 @@ class InferenceEngine:
                     step if step is not None else self._decode_steps,
                     value)
             except Exception as e:
-                print(f"[serving] metrics record failed: {e}",
-                      file=sys.stderr)
+                log.warning("metrics record failed: %s", e)
 
     # ---- observability ----------------------------------------------------
     def decode_rate(self) -> Optional[float]:

@@ -1,0 +1,88 @@
+"""LogParserService: regex registration, multi-metric lines, malformed
+input resilience, and the feed -> metrics -> stream tap path."""
+import pytest
+
+from repro.platform.metrics import LogParserService, MetricsService
+
+
+@pytest.fixture
+def svc():
+    m = MetricsService()
+    return m, LogParserService(m)
+
+
+def test_default_loss_parser(svc):
+    m, p = svc
+    assert p.feed("j", "step=10 loss=0.532") == 1
+    series = m.series("j", "loss")
+    assert series.steps[-1] == 10
+    assert series.values[-1] == pytest.approx(0.532)
+
+
+def test_multi_metric_line_yields_all_metrics(svc):
+    m, p = svc
+    n = p.feed("j", "step=20 loss=0.4 acc=0.91")
+    assert n == 2
+    assert m.series("j", "loss").values[-1] == pytest.approx(0.4)
+    assert m.series("j", "accuracy").values[-1] == pytest.approx(0.91)
+
+
+def test_space_separated_and_accuracy_spelling(svc):
+    m, p = svc
+    assert p.feed("j", "step 3 accuracy 0.5") == 1
+    assert m.series("j", "accuracy").steps[-1] == 3
+
+
+def test_malformed_lines_are_ignored(svc):
+    m, p = svc
+    for line in ("", "garbage", "loss=0.4",          # no step
+                 "step=x loss=0.4",                  # non-numeric step
+                 "step=5 loss=notafloat"):           # non-numeric value
+        assert p.feed("j", line) == 0
+    assert m.metrics("j") == []
+
+
+def test_register_regex_named_groups(svc):
+    m, p = svc
+    p.register_regex(r"iter (?P<step>\d+): ppl=(?P<ppl>[\d.]+)",
+                     fields={"ppl": "perplexity"})
+    assert p.feed("j", "iter 7: ppl=12.5") == 1
+    s = m.series("j", "perplexity")
+    assert s.steps[-1] == 7 and s.values[-1] == pytest.approx(12.5)
+
+
+def test_register_callable_parser(svc):
+    m, p = svc
+
+    def grad_parser(line):
+        if "gnorm" not in line:
+            return []
+        tok = dict(t.split(":") for t in line.split())
+        return [{"metric": "grad_norm", "step": int(tok["step"]),
+                 "value": float(tok["gnorm"])}]
+
+    p.register(grad_parser)
+    assert p.feed("j", "step:11 gnorm:2.25") == 1
+    assert m.series("j", "grad_norm").values[-1] == pytest.approx(2.25)
+
+
+def test_broken_custom_parser_does_not_break_feed(svc):
+    m, p = svc
+
+    def bad_parser(line):
+        raise RuntimeError("broken plugin")
+
+    p.register(bad_parser)
+    # defaults still work even though the custom parser raises
+    assert p.feed("j", "step=1 loss=0.9") == 1
+
+
+def test_feed_reaches_live_stream_tap(svc):
+    m, p = svc
+    tap = m.stream("j")
+    p.feed("j", "step=2 loss=0.7")
+    rec = tap.get(0)
+    assert rec is not None
+    assert rec["type"] == "metric" and rec["metric"] == "loss"
+    assert rec["step"] == 2 and rec["value"] == pytest.approx(0.7)
+    m.unsubscribe_stream("j", tap)

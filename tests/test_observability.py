@@ -1,0 +1,305 @@
+"""Observability layer: tracing, bounded streams, log hub, Prometheus
+export, and the MetricsService taps they plug into."""
+import logging
+import threading
+
+import pytest
+
+from repro.observability.export import (DEFAULT_BUCKETS, Family,
+                                        parse_prometheus_text, render)
+from repro.observability.log import (ContextFilter, JobLogHub,
+                                     job_log_context, register_hub,
+                                     setup_logging, unregister_hub)
+from repro.observability.stream import BoundedStream
+from repro.observability.trace import (CLUSTER_TRACE, Span, TraceStore,
+                                       Tracer, maybe_span)
+from repro.platform.metrics import (EVENTS_CAP, MetricsService,
+                                    Series)
+
+
+# ---------------------------------------------------------------- tracing
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt=1.0):
+        self.t += dt
+        return self.t
+
+
+def test_register_and_reregister_trace():
+    tr = Tracer(TraceStore())
+    tid = tr.register_job("j1")
+    assert tr.trace_of("j1") == tid
+    # idempotent for the same id
+    assert tr.register_job("j1") == tid
+    # recovery rebind with the persisted id keeps the trace
+    tr2 = Tracer(TraceStore())
+    assert tr2.register_job("j2", tid) == tid
+    assert tr2.trace_of("j2") == tid
+
+
+def test_phase_spans_tile_without_overlap():
+    clock = FakeClock()
+    tr = Tracer(TraceStore(), clock=clock)
+    tr.register_job("j")
+    for state in ("QUEUED", "DEPLOYING", "QUEUED", "PROCESSING",
+                  "COMPLETED"):
+        clock.tick()
+        tr.job_state_change("j", state)
+    tl = tr.timeline("j")
+    phases = [s for s in tl["spans"]
+              if s["name"] in ("queue_wait", "place", "run")]
+    assert [p["name"] for p in phases] == ["queue_wait", "place",
+                                           "queue_wait", "run"]
+    for a, b in zip(phases, phases[1:]):
+        assert a["end"] == b["start"]          # exact tiling
+    root = [s for s in tl["spans"] if s["name"] == "job"][0]
+    assert root["end"] is not None
+    assert root["attrs"]["state"] == "COMPLETED"
+
+
+def test_duplicate_state_writes_do_not_duplicate_phases():
+    tr = Tracer(TraceStore())
+    tr.register_job("j")
+    tr.job_state_change("j", "QUEUED")
+    tr.job_state_change("j", "QUEUED")
+    names = [s.name for s in tr.store.spans(tr.trace_of("j"))]
+    assert names.count("queue_wait") == 1
+
+
+def test_instrumentation_spans_parent_under_open_phase():
+    tr = Tracer(TraceStore())
+    tr.register_job("j")
+    tr.job_state_change("j", "PROCESSING")
+    with tr.span("j", "step", step=3) as sp:
+        pass
+    phase = [s for s in tr.store.spans(tr.trace_of("j"))
+             if s.name == "run"][0]
+    assert sp.parent_id == phase.span_id
+    assert sp.end is not None and sp.attrs["step"] == 3
+
+
+def test_span_error_status_on_exception():
+    tr = Tracer(TraceStore())
+    with pytest.raises(ValueError):
+        with tr.span("j", "plan"):
+            raise ValueError("boom")
+    sp = [s for s in tr.store.spans(tr.trace_of("j"))
+          if s.name == "plan"][0]
+    assert sp.status == "error" and sp.attrs["error"] == "ValueError"
+
+
+def test_on_span_end_fires_for_spans_not_events():
+    seen = []
+    tr = Tracer(TraceStore(), on_span_end=lambda s: seen.append(s.name))
+    with tr.span("j", "work"):
+        pass
+    tr.event("j", "fault", node="n0")
+    assert seen == ["work"]
+
+
+def test_cluster_events_fold_into_overlapping_timelines():
+    clock = FakeClock()
+    tr = Tracer(TraceStore(), clock=clock)
+    tr.register_job("j")
+    clock.tick()
+    tr.event(CLUSTER_TRACE, "node_transition", node="n0", state="DEAD")
+    clock.tick()
+    tr.job_state_change("j", "COMPLETED")
+    clock.tick()
+    tr.event(CLUSTER_TRACE, "node_transition", node="n1", state="READY")
+    tl = tr.timeline("j")
+    folded = [e["attrs"]["node"] for e in tl["cluster_events"]]
+    assert folded == ["n0"]         # the post-completion event is outside
+
+
+def test_trace_store_bounds():
+    st = TraceStore(max_traces=2, spans_per_trace=3)
+    for tid in ("a", "b", "c"):
+        for i in range(5):
+            st.record(Span(tid, f"s{i}", float(i)))
+    assert st.trace_ids() == ["b", "c"]        # LRU evicted "a"
+    assert len(st.spans("c")) == 3             # ring per trace
+    st.drop("b")
+    assert st.trace_ids() == ["c"]
+
+
+def test_maybe_span_without_tracer_is_noop():
+    with maybe_span(None, "j", "x") as sp:
+        assert sp is None
+
+
+def test_timeline_unknown_job_raises():
+    tr = Tracer(TraceStore())
+    with pytest.raises(KeyError):
+        tr.timeline("nope")
+
+
+# ------------------------------------------------------------- BoundedStream
+def test_bounded_stream_drops_oldest():
+    s = BoundedStream(maxlen=3)
+    for i in range(5):
+        s.put({"i": i})
+    assert s.dropped == 2
+    assert [s.get(0)["i"] for _ in range(3)] == [2, 3, 4]
+    assert s.get(timeout=0.01) is None         # empty -> timeout
+
+
+def test_bounded_stream_close_wakes_consumer():
+    s = BoundedStream()
+    out = []
+    t = threading.Thread(target=lambda: out.append(s.get(timeout=5)))
+    t.start()
+    s.close()
+    t.join(timeout=2)
+    assert not t.is_alive() and out == [None]
+    s.put({"x": 1})                            # post-close put is dropped
+    assert s.get(0) is None
+
+
+# ----------------------------------------------------------------- log hub
+def test_hub_publish_tail_and_subscribe():
+    hub = JobLogHub(tail=4)
+    sub = hub.subscribe("j")
+    for i in range(6):
+        hub.publish("j", f"line {i}")
+    tail = hub.tail("j")
+    assert [r["line"] for r in tail] == [f"line {i}" for i in range(2, 6)]
+    assert [r["seq"] for r in tail] == [3, 4, 5, 6]   # monotonic seq
+    live = [sub.get(0) for _ in range(6)]
+    assert [r["line"] for r in live] == [f"line {i}" for i in range(6)]
+    hub.unsubscribe("j", sub)
+    assert sub.closed
+
+
+def test_hub_drop_closes_subscribers():
+    hub = JobLogHub()
+    sub = hub.subscribe("j")
+    hub.publish("j", "x")
+    hub.drop("j")
+    assert sub.closed and hub.tail("j") == []
+
+
+def test_logging_routes_into_registered_hub():
+    setup_logging()
+    hub = JobLogHub()
+    register_hub(hub)
+    try:
+        lg = logging.getLogger("repro.test_observability")
+        with job_log_context("job-A", trace_id="t1", member="learner-0"):
+            lg.info("hello %d", 7)
+        lg.info("no job context")               # not routed (job_id "-")
+        lg.info("explicit", extra={"job_id": "job-B"})
+        a, b = hub.tail("job-A"), hub.tail("job-B")
+        assert len(a) == 1 and a[0]["line"] == "hello 7"
+        assert a[0]["trace_id"] == "t1" and a[0]["member"] == "learner-0"
+        assert len(b) == 1 and b[0]["line"] == "explicit"
+    finally:
+        unregister_hub(hub)
+
+
+def test_context_filter_defaults_and_explicit_extra_wins():
+    f = ContextFilter()
+    rec = logging.LogRecord("n", logging.INFO, "p", 1, "m", (), None)
+    f.filter(rec)
+    assert rec.job_id == "-" and rec.trace_id == "-"
+    rec2 = logging.LogRecord("n", logging.INFO, "p", 1, "m", (), None)
+    rec2.job_id = "explicit"
+    with job_log_context("ambient"):
+        f.filter(rec2)
+    assert rec2.job_id == "explicit"
+
+
+# ---------------------------------------------------------------- exporter
+def test_render_parse_roundtrip():
+    f1 = Family("dlaas_test_total", "counter", "a counter")
+    f1.add(3, tenant="a b\\c")                 # escaping path
+    f2 = Family("dlaas_test_gauge", "gauge", 'help with "quotes"')
+    f2.add(1.5)
+    h = Family("dlaas_test_seconds", "histogram", "a histogram")
+    h.add_histogram({"buckets": [0.1, 1.0], "counts": [2, 1],
+                     "sum": 1.4, "count": 3})
+    text = render([f1, f2, h])
+    parsed = parse_prometheus_text(text)
+    assert parsed["families"]["dlaas_test_total"] == "counter"
+    assert parsed["families"]["dlaas_test_seconds"] == "histogram"
+    # cumulative buckets render as _bucket{le=...}: 2, 3, +Inf=3
+    assert parsed["samples"]["dlaas_test_seconds_bucket"] == 3
+    assert parsed["samples"]["dlaas_test_seconds_sum"] == 1
+    assert parsed["samples"]["dlaas_test_seconds_count"] == 1
+    lines = text.splitlines()
+    inf = [l for l in lines if 'le="+Inf"' in l][0]
+    assert inf.endswith(" 3")
+
+
+def test_empty_family_still_renders_help_and_type():
+    text = render([Family("dlaas_nothing", "gauge", "empty")])
+    parsed = parse_prometheus_text(text)
+    assert parsed["families"]["dlaas_nothing"] == "gauge"
+    assert parsed["samples"].get("dlaas_nothing", 0) == 0
+
+
+@pytest.mark.parametrize("bad", [
+    "# FOO bar baz\n",
+    "x 1 2 3\n",
+    "# TYPE x bogus\nx 1\n",
+    "# HELP x h\n# TYPE x gauge\nx notanumber\n",
+    '# HELP x h\n# TYPE x gauge\nx{unclosed="1} 2\n',
+])
+def test_parse_rejects_malformed_text(bad):
+    with pytest.raises(ValueError):
+        parse_prometheus_text(bad)
+
+
+# ------------------------------------------------- MetricsService plumbing
+def test_series_is_bounded():
+    s = Series()
+    for i in range(100):
+        s.add(i, float(i), cap=10)
+    assert len(s.values) == 10 and s.steps[0] == 90
+
+
+def test_events_are_bounded():
+    m = MetricsService()
+    for i in range(EVENTS_CAP + 50):
+        m.event("j", "tick", i)
+    assert len(m.events("j")) == EVENTS_CAP
+
+
+def test_metric_stream_tap_and_drop_detaches():
+    m = MetricsService()
+    tap = m.stream("j")
+    m.record("j", "loss", 0, 1.0)
+    m.event("j", "checkpoint", 0, path="p")
+    recs = [tap.get(0), tap.get(0)]
+    assert recs[0]["type"] == "metric" and recs[0]["metric"] == "loss"
+    assert recs[1]["type"] == "event" and recs[1]["kind"] == "checkpoint"
+    m.drop("j")
+    assert tap.closed
+    m.record("j", "loss", 1, 0.5)              # no tap left; no error
+
+
+def test_typed_wrappers_and_exporter_accessors():
+    m = MetricsService()
+    c = m.counter("platform", "things_total")
+    c.inc()
+    c.inc(2)
+    assert c.get() == 3
+    g = m.gauge("cluster", "nodes_ready")
+    g.set(4)
+    assert g.get() == 4
+    h = m.histogram("platform", "lat_seconds",
+                    buckets=DEFAULT_BUCKETS)
+    h.observe(0.002)
+    h.observe(10.0)
+    assert m.counters_snapshot()["platform"]["things_total"] == 3
+    assert ("cluster", "nodes_ready", 4.0) in m.gauges_snapshot()
+    hists = {(s, n): hd for s, n, hd in m.hists_snapshot()}
+    hd = hists[("platform", "lat_seconds")]
+    assert hd["count"] == 2 and sum(hd["counts"]) >= 1
+    m.record("j", "loss", 5, 0.25)
+    assert ("j", "loss", 5, 0.25) in m.last_values()
