@@ -184,13 +184,22 @@ with DLaaSServer(tempfile.mkdtemp(prefix="verify_obs_")) as srv:
                 or time.time() - t0 > 300:
             raise SystemExit(f"obs smoke FAILED: never PROCESSING ({st})")
         time.sleep(0.02)
-    text = req(f"{base}/metrics").decode()
+    # a Prometheus scraper negotiates on the exact Content-Type
+    with urllib.request.urlopen(f"{base}/metrics") as resp:
+        ctype = resp.headers.get("Content-Type")
+        text = resp.read().decode()
+    if ctype != "text/plain; version=0.0.4; charset=utf-8":
+        raise SystemExit(f"obs smoke FAILED: /metrics Content-Type "
+                         f"{ctype!r} is not the 0.0.4 exposition")
     parsed = parse_prometheus_text(text)       # raises on malformed text
     fams = parsed["families"]
     for want in ("dlaas_queue_depth", "dlaas_cluster_nodes",
                  "dlaas_cluster_gpus_free", "dlaas_journal_seq",
                  "dlaas_journal_compactions_total", "dlaas_trace_spans",
-                 "dlaas_platform_events_total"):
+                 "dlaas_platform_events_total", "dlaas_slo_burn_rate",
+                 "dlaas_slo_objective", "dlaas_alerts_active",
+                 "dlaas_alerts_fired_total",
+                 "dlaas_alerts_remediations_total"):
         if want not in fams:
             raise SystemExit(f"obs smoke FAILED: /metrics missing "
                              f"{want}; has {sorted(fams)}")
@@ -384,6 +393,114 @@ def serving_drill():
 
 serving_drill()
 print("chaos drill OK")
+EOF
+
+echo "== health drill: seeded straggler -> burn/anomaly alert ->" \
+     "auto-restart remediation -> completion with loss parity," \
+     "deterministic across two runs =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+import tempfile
+import time
+import urllib.request
+
+from repro.platform.faults import FaultSchedule
+from repro.service.rest import DLaaSServer
+
+MANIFEST = ("name: health-drill\nlearners: 2\ngpus: 1\nsteps: 40\n"
+            "checkpoint_every: 5\nlr: 0.3\nframework:\n"
+            "  name: repro-mlp\n  d_in: 16\n  n_classes: 4\n"
+            "  distribution: software-ps\n")
+SEED = 11
+
+
+def req(url):
+    r = urllib.request.Request(url)
+    r.add_header("Authorization", "Bearer verify")
+    with urllib.request.urlopen(r) as resp:
+        return json.loads(resp.read())
+
+
+def run(inject):
+    """One training; returns (final_loss, straggler alert sequence,
+    remediation log, HTTP /v1/alerts report, timeline span names)."""
+    with DLaaSServer(tempfile.mkdtemp(prefix="verify_health_"),
+                     tick_interval=0.005, durable=False) as srv:
+        core = srv.core
+        core.health.cooldown_s = 1.0
+        mid = core.deploy_model(MANIFEST)["model_id"]
+        tid = core.create_training(mid)["training_id"]
+        if inject:
+            sched = FaultSchedule.seeded_straggler(
+                SEED, tid, 2, at_step=3, seconds=0.08)
+            core.inject_faults(events=sched.events)
+            t0 = time.time()
+            while not any(
+                    r["action"] == "restart_learner"
+                    for r in core.health.alerts.remediations()):
+                if time.time() - t0 > 300:
+                    raise SystemExit("health drill FAILED: straggler "
+                                     "remediation never ran")
+                time.sleep(0.02)
+        if core.wait_for(tid, timeout=300) != "COMPLETED":
+            raise SystemExit(f"health drill FAILED: job did not "
+                             f"complete ({core.lcm.job_state(tid)})")
+        loss = core.metrics.series(tid, "loss").values[-1]
+        rep = req(f"{srv.url}/v1/alerts")
+        fired = rep["history"] + rep["active"]
+        # the deterministic slice: seeded straggler alerts + what the
+        # controller did about them (throughput/latency SLO alerts are
+        # timing-dependent and excluded on purpose)
+        alerts, seen = [], set()
+        for a in sorted(fired, key=lambda a: a["seq"]):
+            k = (a["name"], a["scope"])
+            if a["name"] == "straggler" and k not in seen:
+                seen.add(k)
+                alerts.append(k)
+        rems, seen = [], set()
+        for r in rep["remediations"]:
+            k = (r["action"], r["scope"], r.get("task", ""))
+            if r["action"] == "restart_learner" and k not in seen:
+                seen.add(k)
+                rems.append(k)
+        names = [s["name"]
+                 for s in core.training_timeline(tid)["spans"]]
+        return loss, alerts, rems, rep, names, tid
+
+
+base_loss, _, _, _, _, _ = run(inject=False)
+loss1, alerts1, rems1, rep1, names1, tid = run(inject=True)
+loss2, alerts2, rems2, _, _, _ = run(inject=True)
+
+victim = FaultSchedule.seeded_straggler(SEED, tid, 2).events[0].member
+scope = f"{tid}/learner-{victim}"
+if alerts1 != [("straggler", scope)]:
+    raise SystemExit(f"health drill FAILED: expected one straggler "
+                     f"alert on {scope}, got {alerts1}")
+if rems1 != [("restart_learner", scope,
+              f"{tid}-learners.{victim}")]:
+    raise SystemExit(f"health drill FAILED: remediation log "
+                     f"{rems1} did not requeue the victim learner")
+if (alerts1, rems1) != (alerts2, rems2):
+    raise SystemExit(f"health drill FAILED: seeded drill not "
+                     f"deterministic: {(alerts1, rems1)} vs "
+                     f"{(alerts2, rems2)}")
+# the alert reached BOTH surfaces: /v1/alerts and the job timeline
+if not any(a["name"] == "straggler" and a["scope"] == scope
+           for a in rep1["history"] + rep1["active"]):
+    raise SystemExit("health drill FAILED: straggler missing from "
+                     "/v1/alerts")
+for want in ("alert", "remediation"):
+    if want not in names1:
+        raise SystemExit(f"health drill FAILED: no {want!r} event in "
+                         f"the job timeline: {sorted(set(names1))}")
+# loss parity: the remediated run converges like the unfaulted one
+if loss1 > max(2 * base_loss, base_loss + 0.3):
+    raise SystemExit(f"health drill FAILED: loss {loss1:.4f} vs "
+                     f"unfaulted baseline {base_loss:.4f}")
+print(f"health drill OK: straggler {scope} alerted + requeued, "
+      f"deterministic across two seeded runs, loss {loss1:.4f} vs "
+      f"baseline {base_loss:.4f}")
 EOF
 
 echo "== storage hygiene: production object-store I/O must go through" \

@@ -155,6 +155,10 @@ class SoftwareParameterServer:
         self._bsp_cond = threading.Condition()
         self._bsp_round = 0
         self._arrived: List[int] = []
+        self._round_t0: Optional[float] = None   # first arrival this round
+        # fault injection: slot -> [sleep_seconds, rounds_left] (0 =
+        # until cleared); a restarted learner rejoins clean via leave()
+        self._slow: Dict[int, List] = {}
         self._pull_bufs: Dict[int, np.ndarray] = {}
         # data-plane counters — always mutated under _stats_lock (pushes
         # arrive concurrently; unsynchronized += drops increments)
@@ -251,6 +255,10 @@ class SoftwareParameterServer:
         with self._lock:
             self._members.discard(learner_id)
             # a crashed learner must not deadlock a BSP barrier
+        # restart cures an injected slowdown: the replacement
+        # incarnation of this slot starts from a clean data plane
+        with self._stats_lock:
+            self._slow.pop(learner_id % self.n_learners, None)
         with self._bsp_cond:
             self._bsp_cond.notify_all()
 
@@ -293,6 +301,19 @@ class SoftwareParameterServer:
         withdrawn (never aggregated) — callers with error-feedback state
         must put the signal back."""
         slot = learner_id % self.n_learners
+        # injected slowdown (fault drills): sleep outside every lock so
+        # a slow slot delays only itself — exactly like a degraded host
+        sleep_s = 0.0
+        with self._stats_lock:
+            ent = self._slow.get(slot)
+            if ent is not None:
+                sleep_s = ent[0]
+                if ent[1] > 0:
+                    ent[1] -= 1
+                    if ent[1] == 0:
+                        del self._slow[slot]
+        if sleep_s > 0:
+            time.sleep(sleep_s)
         wire, dense = self._receive(slot, payload)
         with self._stats_lock:
             self.push_count += 1
@@ -308,7 +329,19 @@ class SoftwareParameterServer:
         with self._bsp_cond:
             my_round = self._bsp_round
             if slot not in self._arrived:     # re-push after a timeout
+                # PS-side straggler signal: arrival time relative to the
+                # round's FIRST arrival. The BSP barrier inverts
+                # learner-side timing (fast learners block waiting for
+                # the straggler), so this is the honest per-slot lag.
+                now_pc = time.perf_counter()
+                if not self._arrived:
+                    self._round_t0 = now_pc
+                lag = now_pc - (self._round_t0 or now_pc)
                 self._arrived.append(slot)    # replaces the row in place
+                if self.metrics is not None and self.job_id is not None:
+                    self.metrics.record_bounded(
+                        self.job_id, f"ps_lag_s.{slot}",
+                        self._bsp_round, lag, keep=256)
             if len(self._arrived) >= max(1, self.active):
                 self._finish_round_locked()
             else:
@@ -371,6 +404,20 @@ class SoftwareParameterServer:
             self.bytes_pulled += buf.nbytes
         return buf
 
+    # ---- fault injection ---------------------------------------------------
+    def slow_learner(self, slot: int, seconds: float, rounds: int = 0):
+        """Inject a per-push delay into one learner slot (the SLOW fault
+        kind): every push from ``slot`` sleeps ``seconds`` first, for
+        ``rounds`` pushes (0 = until the learner leaves — a restart via
+        the drain/requeue path clears it in ``leave``)."""
+        with self._stats_lock:
+            self._slow[slot % self.n_learners] = [float(seconds),
+                                                  int(rounds)]
+        log.warning("injected slowdown: slot %d sleeps %.3fs per push "
+                    "(%s rounds)", slot % self.n_learners, seconds,
+                    rounds or "unbounded",
+                    extra={"job_id": self.job_id or "-"})
+
     # ---- state management -------------------------------------------------
     def load_flat(self, flat: np.ndarray):
         """Overwrite the global weights (checkpoint-restore republish)."""
@@ -406,6 +453,7 @@ class SoftwareParameterServer:
                 "bytes_pushed_dense": dense,
                 "bytes_pulled": self.bytes_pulled,
                 "agg_rounds": rounds,
+                "slow_slots": sorted(self._slow),
             }
         out["compression_ratio"] = round(dense / wire, 3) if wire else None
         out["agg_ms_per_round"] = (round(agg_s / rounds * 1e3, 3)

@@ -13,6 +13,11 @@ Three pillars, threaded through every existing layer:
   * ``log``    — structured ``logging`` setup with a job/trace context
     filter and a per-job bounded pub-sub log hub that feeds the
     ``GET /v1/trainings/<id>/logs?follow=1`` live stream.
+  * ``slo``    — declarative SLO specs, multi-window burn-rate
+    evaluation, anomaly detectors (PS stragglers, admission-queue
+    growth, checkpoint stalls) and the deduplicating ``AlertManager``
+    that feeds ``GET /v1/alerts`` and the auto-remediating
+    ``HealthController`` (``repro.platform.health``).
 
 Everything here is stdlib-only and import-light: platform modules may
 import it without dragging in jax or the service layer.
@@ -22,13 +27,21 @@ from repro.observability.export import (parse_prometheus_text,
 from repro.observability.log import (ContextFilter, JobLogHub,
                                      job_log_context, register_hub,
                                      setup_logging, unregister_hub)
+from repro.observability.slo import (Alert, AlertManager, BurnWindow,
+                                     SLOSpec, SLOTracker, burn_rate,
+                                     detect_checkpoint_stall,
+                                     detect_queue_growth,
+                                     detect_stragglers)
 from repro.observability.stream import BoundedStream
 from repro.observability.trace import (Span, TraceStore, Tracer,
                                        maybe_span, new_trace_id)
 
 __all__ = [
-    "BoundedStream", "ContextFilter", "JobLogHub", "Span", "TraceStore",
-    "Tracer", "job_log_context", "maybe_span", "new_trace_id",
-    "parse_prometheus_text", "prometheus_text", "register_hub",
-    "setup_logging", "unregister_hub",
+    "Alert", "AlertManager", "BoundedStream", "BurnWindow",
+    "ContextFilter", "JobLogHub", "SLOSpec", "SLOTracker", "Span",
+    "TraceStore", "Tracer", "burn_rate", "detect_checkpoint_stall",
+    "detect_queue_growth", "detect_stragglers", "job_log_context",
+    "maybe_span", "new_trace_id", "parse_prometheus_text",
+    "prometheus_text", "register_hub", "setup_logging",
+    "unregister_hub",
 ]

@@ -332,6 +332,38 @@ def build_platform_families(core) -> List[Family]:
             log.debug("%s collector failed: %s: %s",
                       'histograms', type(e).__name__, e)
 
+    # -- SLO engine / alerts ----------------------------------------------
+    fsb = Family("dlaas_slo_burn_rate", "gauge",
+                 "Worst-window error-budget burn rate per SLO tracker.")
+    fso = Family("dlaas_slo_objective", "gauge",
+                 "Configured objective per SLO tracker.")
+    faa = Family("dlaas_alerts_active", "gauge",
+                 "Currently-firing alerts by kind and severity.")
+    faf = Family("dlaas_alerts_fired_total", "counter",
+                 "Alerts ever fired, by alert name.")
+    far = Family("dlaas_alerts_remediations_total", "counter",
+                 "Auto-remediations taken, by action.")
+    fams += [fsb, fso, faa, faf, far]
+    try:
+        health = core.health
+        for ev in health.slo_status():
+            fsb.add(min(ev["burn"], 1e12), slo=ev["kind"],
+                    scope=ev["scope"])
+            fso.add(ev["objective"], slo=ev["kind"], scope=ev["scope"])
+        counts = health.alerts.counts_by_kind()
+        for key, n in sorted(counts["active"].items()):
+            kind, severity = key.split("|", 1)
+            faa.add(n, kind=kind, severity=severity)
+        for name, n in sorted(counts["fired"].items()):
+            faf.add(n, alert=name)
+        for action, n in sorted(counts["remediations"].items()):
+            far.add(n, action=action)
+    except Exception as e:
+        # a broken surface degrades to an empty family;
+        # a scrape must never 500
+        log.debug("%s collector failed: %s: %s",
+                  'slo', type(e).__name__, e)
+
     # -- tracing ----------------------------------------------------------
     ft = Family("dlaas_trace_spans", "gauge",
                 "Spans currently held in the trace ring.")

@@ -39,6 +39,15 @@ class Autoscaler:
         self.scale_ups = 0
         self.scale_downs = 0
         self.events: List[Dict] = []
+        # one-shot scale-up hint from the SLO HealthController: a
+        # queue-wait burn means demand is waiting LONG, which residual
+        # free-GPU math alone may not see (quota-shaped backlogs)
+        self._hint_reason: str = ""
+
+    def hint_scale_up(self, reason: str = "slo"):
+        """Ask the next ``step()`` to add one node (subject to
+        ``max_nodes``) regardless of the residual-backlog math."""
+        self._hint_reason = reason or "slo"
 
     # ---- demand / capacity signals ----------------------------------------
     def queued_demand(self) -> Resources:
@@ -65,6 +74,14 @@ class Autoscaler:
     # ---- one decision round ------------------------------------------------
     def step(self):
         cluster = self.scheduler.cluster
+        if self._hint_reason:
+            reason, self._hint_reason = self._hint_reason, ""
+            self._idle = 0
+            if len(cluster.nodes) < self.max_nodes:
+                self._add_node(cluster)
+                self.events[-1] = {**self.events[-1],
+                                   "action": "scale_up_hint",
+                                   "reason": reason}
         demand = self.queued_demand()
         backlog = demand.gpus if demand.gpus > 0 else \
             (1 if demand.cpus > 0 else 0)

@@ -372,9 +372,12 @@ class Scheduler:
         self._lock = threading.RLock()
         self._threads: Dict[str, threading.Thread] = {}
         # optional tick-driven companions (attached by the service /
-        # chaos harness): an Autoscaler and a FaultInjector
+        # chaos harness): an Autoscaler, a FaultInjector, and the SLO
+        # HealthController (platform/health.py; 'health' is the node
+        # HealthChecker above — distinct concerns, distinct attrs)
         self.autoscaler = None
         self.faults = None
+        self.health_controller = None
 
     # ---- submission -----------------------------------------------------
     def submit(self, app: App, *, tenant: Optional[str] = None,
@@ -626,6 +629,16 @@ class Scheduler:
             self._place_round()
             if self.autoscaler is not None:
                 self.autoscaler.step()
+        # the SLO health pass runs OUTSIDE the placement lock: its
+        # remediations re-enter scheduler methods (preempt/preempt_app)
+        # and touch metrics/LCM surfaces with their own locks
+        hc = self.health_controller
+        if hc is not None:
+            try:
+                hc.step(self)
+            except Exception as e:
+                log.warning("health controller step failed: %s: %s",
+                            type(e).__name__, e)
 
     def _migrate_draining(self):
         """Elastic rescale on shrinking capacity: work running on a

@@ -23,23 +23,30 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
-KILL, DRAIN, PARTITION, DELAY, RECOVER, CRASH_CORE = (
-    "kill", "drain", "partition", "delay", "recover", "crash_core")
+KILL, DRAIN, PARTITION, DELAY, RECOVER, CRASH_CORE, SLOW = (
+    "kill", "drain", "partition", "delay", "recover", "crash_core",
+    "slow")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     kind: str                       # kill | drain | partition | delay |
-                                    # recover | crash_core
-    node: str                       # crash_core: ignored (use "")
+                                    # recover | crash_core | slow
+    node: str                       # crash_core/slow: ignored (use "")
     at_tick: Optional[int] = None   # cluster clock trigger
     at_step: Optional[int] = None   # job-progress trigger (needs job_id)
     job_id: Optional[str] = None
-    duration: int = 0               # delay: silent ticks
+    duration: int = 0               # delay: silent ticks; slow: rounds
+                                    # (0 = until the learner restarts)
+    member: Optional[int] = None    # slow: victim learner slot
+    seconds: float = 0.0            # slow: injected per-push sleep
 
     def describe(self) -> str:
         trig = (f"tick>={self.at_tick}" if self.at_tick is not None
                 else f"{self.job_id}.step>={self.at_step}")
+        if self.kind == SLOW:
+            return (f"slow {self.job_id}/learner-{self.member or 0} "
+                    f"by {self.seconds}s @ {trig}")
         tgt = self.node or "core"
         return f"{self.kind} {tgt} @ {trig}"
 
@@ -62,6 +69,18 @@ class FaultSchedule:
                   for _ in range(n_events)]
         events.sort(key=lambda e: (e.at_tick, e.node, e.kind))
         return cls(events)
+
+    @classmethod
+    def seeded_straggler(cls, seed: int, job_id: str, n_learners: int, *,
+                         at_step: int = 3, seconds: float = 0.08,
+                         rounds: int = 0) -> "FaultSchedule":
+        """One seeded straggler: once ``job_id`` reaches ``at_step``, a
+        seed-chosen learner slot starts sleeping ``seconds`` per PS push
+        (the health-drill fault). Same seed -> same victim slot."""
+        victim = random.Random(seed).randrange(max(1, n_learners))
+        return cls([FaultEvent(SLOW, "", at_step=at_step, job_id=job_id,
+                               member=victim, seconds=seconds,
+                               duration=rounds)])
 
     def __iter__(self):
         return iter(self.events)
@@ -123,6 +142,18 @@ class FaultInjector:
             return None
         return self.lcm.max_step(job_id)
 
+    def _find_ps(self, job_id: Optional[str]):
+        """The job's SoftwareParameterServer (SLOW target), via the core
+        record or an explicit ``ps_of`` hook set by tests."""
+        hook = getattr(self, "ps_of", None)
+        if hook is not None:
+            return hook(job_id)
+        if self.core is None or job_id is None:
+            return None
+        rec = self.core.trainings.get(job_id) or {}
+        plan = rec.get("plan")
+        return plan.meta.get("ps") if plan is not None else None
+
     def _fire(self, ev: FaultEvent, cluster) -> bool:
         if ev.kind == CRASH_CORE:
             # SIGKILL-equivalent for the control plane itself: detach the
@@ -131,6 +162,15 @@ class FaultInjector:
             if self.core is None:
                 return False
             self.core.crash()
+            return True
+        if ev.kind == SLOW:
+            # degrade one PS learner slot: the software PS injects a
+            # per-push sleep (cleared when that learner restarts)
+            ps = self._find_ps(ev.job_id)
+            if ps is None:
+                return False
+            ps.slow_learner(ev.member or 0, seconds=ev.seconds,
+                            rounds=ev.duration)
             return True
         if ev.node not in cluster.nodes:
             return False

@@ -235,7 +235,13 @@ class MetricsService:
     def percentile(self, job_id: str, metric: str,
                    q: float) -> Optional[float]:
         """q-th percentile (nearest-rank) of a series' values — e.g.
-        p50/p99 request latency for a serving endpoint."""
+        p50/p99 request latency for a serving endpoint.
+
+        Contract (the SLO engine leans on these edges): an empty or
+        unknown series returns ``None`` — never raises; a single-sample
+        series returns that sample for every q; q is effectively
+        clamped to [0, 100], so q <= 0 gives the minimum and q >= 100
+        the maximum."""
         with self._lock:
             vals = sorted(self._series[job_id][metric].values)
         if not vals:

@@ -32,6 +32,12 @@ the REST API').
                       [--max-new N --deadline S]
   dlaas serve stop    --id <endpoint-id>        # drain, then stop
   dlaas queue                               # fair-share queue + tenants
+  dlaas alerts [--follow] [--max-s S]       # SLO/anomaly alerts: active,
+                                            # history + remediation log;
+                                            # -f tails the live NDJSON
+                                            # alert stream
+  dlaas slo                                 # burn-rate evaluation of
+                                            # every tracked SLO
   dlaas recovery                            # last crash-recovery report
   dlaas cluster status                      # node lifecycle + autoscaler
   dlaas cluster add    [--gpus G --cpus C --memory M --spot --name N]
@@ -183,6 +189,13 @@ def main(argv=None):
     sub.add_parser("queue")
     sub.add_parser("metrics")
 
+    al = sub.add_parser("alerts")
+    al.add_argument("--follow", "-f", action="store_true",
+                    help="tail the live alert/remediation stream")
+    al.add_argument("--max-s", type=float, default=5.0, dest="max_s",
+                    help="follow window in seconds (default 5)")
+    sub.add_parser("slo")
+
     cl = sub.add_parser("cluster")
     clsub = cl.add_subparsers(dest="sub", required=True)
     clsub.add_parser("status")
@@ -321,6 +334,48 @@ def main(argv=None):
         req.add_header("Authorization", f"Bearer {args.token}")
         with urllib.request.urlopen(req) as r:
             sys.stdout.write(r.read().decode())
+    elif args.cmd == "alerts":
+        if args.follow:
+            # tail the live alert/remediation NDJSON stream: one
+            # snapshot line, then records as the health controller
+            # fires/resolves alerts and acts on them
+            req = urllib.request.Request(
+                f"{base}/v1/alerts?follow=1&max_s={args.max_s}")
+            req.add_header("Authorization", f"Bearer {args.token}")
+            with urllib.request.urlopen(req) as r:
+                for raw in r:
+                    raw = raw.strip()
+                    if not raw:
+                        continue
+                    try:
+                        rec = json.loads(raw)
+                    except json.JSONDecodeError:
+                        sys.stdout.write(raw.decode() + "\n")
+                        continue
+                    if rec.get("type") == "snapshot":
+                        sys.stdout.write(
+                            f"[snapshot] {len(rec.get('active', []))} "
+                            f"active, "
+                            f"{len(rec.get('remediations', []))} "
+                            f"remediations\n")
+                    elif rec.get("type") == "remediation":
+                        sys.stdout.write(
+                            f"[remediation] {rec.get('action')} "
+                            f"for {rec.get('alert')} "
+                            f"scope={rec.get('scope')}\n")
+                    else:
+                        sys.stdout.write(
+                            f"[{rec.get('state', '-')}] "
+                            f"{rec.get('name')} "
+                            f"scope={rec.get('scope')} "
+                            f"severity={rec.get('severity')}\n")
+                    sys.stdout.flush()
+        else:
+            print(json.dumps(_req(f"{base}/v1/alerts",
+                                  token=args.token), indent=1))
+    elif args.cmd == "slo":
+        print(json.dumps(_req(f"{base}/v1/slo", token=args.token),
+                         indent=1))
     elif args.cmd == "recovery":
         print(json.dumps(_req(f"{base}/v1/recovery", token=args.token),
                          indent=1))

@@ -126,6 +126,11 @@ class DLaaSCore:
         self.lcm = LifecycleManager(self.zk, self.scheduler,
                                     tracer=self.tracer)
         self.log_parser = LogParserService(self.metrics)
+        # SLO engine: burn-rate alerts + anomaly detection + alert-driven
+        # remediation, stepped from the scheduler tick (outside its lock)
+        from repro.platform.health import HealthController
+        self.health = HealthController(self, autoscaler=self.autoscaler)
+        self.scheduler.health_controller = self.health
         self.storage = StorageManager()
         self.workdir = workdir
         self.storage.register("local", LocalFSStore(f"{workdir}/local"))
@@ -969,6 +974,21 @@ class DLaaSCore:
         """Platform-wide metrics in Prometheus text exposition format
         (GET /metrics)."""
         return _prom_text(self)
+
+    def alerts(self) -> Dict:
+        """Active/recent alerts + the remediation log (GET /v1/alerts,
+        ``dlaas alerts``)."""
+        return self.health.alert_report()
+
+    def alert_stream(self):
+        """Live alert/remediation subscription for ``alerts?follow=1``.
+        Caller must ``health.alerts.unsubscribe`` it when done."""
+        return self.health.alerts.stream()
+
+    def slo_status(self) -> List[Dict]:
+        """Every SLO tracker's current burn-rate evaluation
+        (GET /v1/slo, ``dlaas slo``)."""
+        return self.health.slo_status()
 
     def log_stream(self, job_id: str):
         """Structured-log tail + live subscription for streaming

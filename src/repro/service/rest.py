@@ -87,6 +87,19 @@ Endpoints (v1):
                                          trainings resumed/requeued/
                                          were abandoned + endpoints
                                          redeployed
+  GET    /v1/alerts                      SLO/anomaly alerts: active set,
+                                         resolved history, remediation
+                                         log (auto-restarts, scale-up
+                                         hints, load sheds)
+  GET    /v1/alerts?follow=1             chunked NDJSON live alert
+                                         stream: one snapshot line, then
+                                         alert/remediation records as
+                                         the health controller emits
+                                         them (max_s= bounds the window)
+  GET    /v1/slo                         burn-rate evaluation of every
+                                         tracked SLO (queue-wait,
+                                         availability, p99 latency,
+                                         training throughput)
 
 Auth: ``Authorization: Bearer <user-token>``; the token's user is the
 metering principal. ``Idempotency-Key: <key>`` on POST /v1/trainings or
@@ -317,6 +330,13 @@ class _Handler(BaseHTTPRequestHandler):
                 return self._json(self.core.usage)
             if parts == ["v1", "recovery"]:
                 return self._json(self.core.recovery_report())
+            if parts == ["v1", "alerts"]:
+                if follow:
+                    return self._follow_alerts(
+                        max_s=min(float(query.get("max_s", 5.0)), 60.0))
+                return self._json(self.core.alerts())
+            if parts == ["v1", "slo"]:
+                return self._json(self.core.slo_status())
             return self._err(404, f"no route GET {self.path}")
         except KeyError as e:
             return self._err(404, str(e))
@@ -404,6 +424,27 @@ class _Handler(BaseHTTPRequestHandler):
                 self._chunk((json.dumps(rec) + "\n").encode())
         finally:
             self.core.loghub.unsubscribe(job_id, stream)
+        self._end_chunked()
+
+    def _follow_alerts(self, max_s: float = 5.0):
+        """``/v1/alerts?follow=1``: one snapshot line (active alerts +
+        remediation log so far), then live alert/remediation records as
+        NDJSON. Platform-wide — bounded only by ``max_s``."""
+        stream = self.core.alert_stream()
+        self._start_chunked("application/x-ndjson")
+        try:
+            snap = {"type": "snapshot", **self.core.alerts()}
+            self._chunk((json.dumps(snap) + "\n").encode())
+            t0 = time.time()
+            while time.time() - t0 < max_s:
+                rec = stream.get(timeout=0.2)
+                if rec is None:
+                    if stream.closed:
+                        break
+                    continue
+                self._chunk((json.dumps(rec) + "\n").encode())
+        finally:
+            self.core.health.alerts.unsubscribe(stream)
         self._end_chunked()
 
     def _follow_metrics(self, job_id: str, max_s: float = 5.0):

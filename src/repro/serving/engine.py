@@ -128,6 +128,12 @@ class InferenceEngine:
             [None] * self.capacity
         self._next_tok = np.zeros(self.capacity, np.int32)
         self._cache = None
+        # SLO remediation knobs: a shed limit tightens admission below
+        # max_queue (429 earlier under a p99 burn); pended slots grow
+        # capacity at the NEXT start() — the KV cache and decode jit are
+        # shaped by capacity, so a live incarnation can't grow in place
+        self._shed_limit: Optional[int] = None
+        self._pending_slots = 0
         self.params = None
         self._axes = self._cache_axes()
         self._flat_io = None                # (ravel, unravel, size)
@@ -170,6 +176,14 @@ class InferenceEngine:
         job uploaded (None: fresh init from ``seed`` — deploy-from-arch).
         Called once per task incarnation: a re-placed endpoint rebuilds
         everything and resumes its re-queued requests."""
+        with self._lock:
+            if self._pending_slots:
+                # apply slots pended by add_slot(): this incarnation's
+                # cache/jits are built at the grown capacity below
+                self.capacity += self._pending_slots
+                self._pending_slots = 0
+                self._slots = [None] * self.capacity
+                self._next_tok = np.zeros(self.capacity, np.int32)
         _, unravel, size = self._ensure_flat_io()
         if flat_params is not None:
             flat_params = np.asarray(flat_params, np.float32).reshape(-1)
@@ -280,12 +294,16 @@ class InferenceEngine:
                     f"endpoint {self.endpoint_id} is not accepting "
                     f"requests")
             self._incr("requests_total")
-            if len(self._queue) >= self.max_queue:
+            limit = (self._shed_limit if self._shed_limit is not None
+                     else self.max_queue)
+            if len(self._queue) >= limit:
                 req.status = R_REJECTED
                 req.done.set()
                 self._incr("rejected_total")
                 raise QueueFull(
-                    f"admission queue full ({self.max_queue} waiting)")
+                    f"admission queue full ({limit} waiting"
+                    + (", load shed" if self._shed_limit is not None
+                       else "") + ")")
             self._queue.append(req)
             depth = len(self._queue)
             if self.tracer is not None:
@@ -553,6 +571,34 @@ class InferenceEngine:
             except Exception as e:
                 log.warning("metrics record failed: %s", e)
 
+    # ---- SLO remediation hooks --------------------------------------------
+    def shed(self, frac: float = 0.5):
+        """Tighten admission to ``frac`` of max_queue (min 1): requests
+        beyond it 429 immediately instead of queueing into a latency
+        burn. Reversed by ``unshed``."""
+        with self._lock:
+            self._shed_limit = max(1, int(self.max_queue * frac))
+        log.warning("endpoint %s shedding load: admission limit %d "
+                    "(of %d)", self.endpoint_id, self._shed_limit,
+                    self.max_queue)
+
+    def unshed(self):
+        with self._lock:
+            was, self._shed_limit = self._shed_limit, None
+        if was is not None:
+            log.info("endpoint %s shed lifted (limit %d -> %d)",
+                     self.endpoint_id, was, self.max_queue)
+
+    def add_slot(self, n: int = 1):
+        """Pend ``n`` extra decode slots; applied at the next ``start()``
+        (the KV cache and decode jit are shaped by capacity). The caller
+        recycles the server task so its next incarnation picks them up."""
+        with self._lock:
+            self._pending_slots += max(0, int(n))
+        log.warning("endpoint %s pending +%d decode slot(s) (capacity "
+                    "%d -> %d at next start)", self.endpoint_id, n,
+                    self.capacity, self.capacity + self._pending_slots)
+
     # ---- observability ----------------------------------------------------
     def decode_rate(self) -> Optional[float]:
         """Measured decode steps/s over the serve so far (the measured
@@ -581,6 +627,9 @@ class InferenceEngine:
                 "queue_depth": len(self._queue),
                 "active": sum(1 for r in self._slots if r is not None),
                 "capacity": self.capacity,
+                "max_queue": self.max_queue,
+                "shed_limit": self._shed_limit,
+                "pending_slots": self._pending_slots,
                 "decode_steps": steps,
                 "occupied_slot_steps": occ,
                 "mean_batch_occupancy": round(

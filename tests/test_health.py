@@ -1,0 +1,314 @@
+"""SLO engine + HealthController: burn-rate math, anomaly detectors,
+alert bookkeeping, and the end-to-end straggler drill (slow one PS
+learner -> alert -> auto-restart -> job completes)."""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.observability.slo import (AlertManager, BurnWindow, SLOSpec,
+                                     SLOTracker, burn_rate,
+                                     detect_checkpoint_stall,
+                                     detect_queue_growth,
+                                     detect_stragglers)
+from repro.platform.metrics import MetricsService
+
+
+# -------------------------------------------------------------- burn math
+def test_burn_rate_basics():
+    # spending the budget exactly at the sustainable rate burns at 1.0
+    assert burn_rate(1, 10, 0.9) == pytest.approx(1.0)
+    # all-bad at a 10% budget burns 10x
+    assert burn_rate(10, 10, 0.9) == pytest.approx(10.0)
+    assert burn_rate(0, 100, 0.99) == 0.0
+
+
+def test_burn_rate_total_on_edges():
+    assert burn_rate(0, 0, 0.9) == 0.0            # no observations
+    assert burn_rate(5, 0, 0.9) == 0.0            # degenerate total
+    assert burn_rate(-3, 10, 0.9) == 0.0          # clamped below
+    assert burn_rate(20, 10, 0.9) == pytest.approx(10.0)   # clamped above
+    # zero-width budget: infinite burn iff anything failed
+    assert burn_rate(1, 10, 1.0) == math.inf
+    assert burn_rate(0, 10, 1.0) == 0.0
+
+
+def test_tracker_fires_only_when_both_windows_burn():
+    spec = SLOSpec(name="s", kind="availability", scope="ep",
+                   objective=0.9, windows=(BurnWindow(10.0, 2.0, 2.0),))
+    tr = SLOTracker(spec)
+    t0 = 1000.0
+    # old bad observations inside the long window but outside the short:
+    # long burns, short doesn't -> not firing (no sustained burn)
+    tr.observe(0, 10, now=t0 - 8.0)
+    tr.observe(10, 0, now=t0 - 0.5)
+    ev = tr.evaluate(now=t0)
+    assert not ev["firing"]
+    w = ev["windows"][0]
+    assert w["burn_long"] >= 2.0 and w["burn_short"] < 2.0
+    # fresh bad observations light up both windows -> firing
+    tr.observe(0, 10, now=t0 - 0.2)
+    ev = tr.evaluate(now=t0)
+    assert ev["firing"] and ev["burn"] >= 2.0
+
+
+def test_tracker_zero_errors_never_fires():
+    tr = SLOTracker(SLOSpec(name="s", kind="queue_wait", scope="t",
+                            objective=0.9))
+    for i in range(50):
+        tr.observe(1, 0, now=100.0 + i * 0.01)
+    ev = tr.evaluate(now=100.6)
+    assert not ev["firing"] and ev["burn"] == 0.0
+
+
+def test_tracker_resolves_once_burn_ages_out():
+    spec = SLOSpec(name="s", kind="latency_p99", scope="ep",
+                   objective=0.9, windows=(BurnWindow(3.0, 0.75, 2.0),))
+    tr = SLOTracker(spec)
+    tr.observe(0, 5, now=50.0)
+    assert tr.evaluate(now=50.1)["firing"]
+    # only good observations afterwards: the short window clears first
+    for i in range(10):
+        tr.observe(1, 0, now=51.0 + i * 0.1)
+    assert not tr.evaluate(now=52.0)["firing"]
+
+
+# ----------------------------------------------------------- AlertManager
+def test_alert_manager_dedup_and_resolve_cycle():
+    am = AlertManager()
+    a1 = am.fire("straggler", "anomaly", "j/learner-1", value=0.08)
+    a2 = am.fire("straggler", "anomaly", "j/learner-1", value=0.12)
+    assert a1.seq == a2.seq and a2.value == 0.12   # refreshed, not dup
+    assert am.fired_total == 1
+    assert [a["name"] for a in am.active()] == ["straggler"]
+    assert am.is_active("straggler", "j/learner-1")
+    al = am.resolve("straggler", "j/learner-1")
+    assert al.state == "resolved" and al.resolved_at is not None
+    assert am.active() == [] and len(am.history()) == 1
+    assert am.resolve("straggler", "j/learner-1") is None   # idempotent
+
+
+def test_alert_manager_streams_and_remediation_log():
+    am = AlertManager()
+    tap = am.stream()
+    am.fire("queue_growth", "anomaly", "ep-1", value=6)
+    am.record_remediation("shed_load", alert="queue_growth",
+                          scope="ep-1", shed_limit=4)
+    am.resolve("queue_growth", "ep-1")
+    recs = [tap.get(0) for _ in range(3)]
+    assert [r["type"] for r in recs] == ["alert", "remediation", "alert"]
+    assert recs[0]["state"] == "firing"
+    assert recs[1]["action"] == "shed_load"
+    assert recs[2]["state"] == "resolved"
+    assert am.remediations()[0]["shed_limit"] == 4
+    counts = am.counts_by_kind()
+    assert counts["fired"] == {"queue_growth": 1}
+    assert counts["remediations"] == {"shed_load": 1}
+    am.unsubscribe(tap)
+    assert tap.closed
+
+
+# -------------------------------------------------------------- detectors
+def _lag_metrics(job_id, lags_by_slot, rounds=6):
+    m = MetricsService()
+    for r in range(rounds):
+        for slot, lag in lags_by_slot.items():
+            m.record_bounded(job_id, f"ps_lag_s.{slot}", r, lag, keep=256)
+    return m
+
+
+def test_detect_stragglers_flags_the_slow_slot():
+    m = _lag_metrics("j", {0: 0.001, 1: 0.002, 2: 0.25, 3: 0.001})
+    out = detect_stragglers(m, "j", 4)
+    assert [o["slot"] for o in out] == [2]
+    assert out[0]["lag_s"] == pytest.approx(0.25, abs=1e-3)
+    assert out[0]["ratio"] > 3.0
+
+
+def test_detect_stragglers_no_false_positive_on_healthy_jitter():
+    # sub-millisecond spread: the min_abs_s floor keeps ratios honest
+    m = _lag_metrics("j", {0: 0.0001, 1: 0.0009})
+    assert detect_stragglers(m, "j", 2) == []
+
+
+def test_detect_stragglers_two_learner_case():
+    # with n=2 the "median of others" is a single healthy slot
+    m = _lag_metrics("j", {0: 0.002, 1: 0.2})
+    out = detect_stragglers(m, "j", 2)
+    assert [o["slot"] for o in out] == [1]
+
+
+def test_detect_stragglers_needs_a_gang():
+    m = _lag_metrics("j", {0: 5.0})
+    assert detect_stragglers(m, "j", 1) == []
+    assert detect_stragglers(MetricsService(), "j", 4) == []
+
+
+def test_detect_queue_growth_monotone_to_bound():
+    st = {"max_queue": 8}
+    hist = [0, 1, 2, 3, 4, 5, 6, 7]
+    assert detect_queue_growth(st, hist)
+    assert not detect_queue_growth(st, [7, 6, 5, 4, 3, 2, 1, 0])
+    assert not detect_queue_growth(st, hist[:4])       # too few samples
+    assert not detect_queue_growth({"max_queue": 0}, hist)
+    # monotone but far from the bound: saturation is not imminent
+    assert not detect_queue_growth({"max_queue": 100}, hist)
+
+
+def test_detect_checkpoint_stall():
+    m = MetricsService()
+    assert detect_checkpoint_stall(m, "j", 50) is None  # never checkpoints
+    for s in (5, 10, 15):
+        m.event("j", "checkpoint", s, path=f"c{s}")
+    assert detect_checkpoint_stall(m, "j", 18) is None  # on cadence
+    stall = detect_checkpoint_stall(m, "j", 40)
+    assert stall is not None
+    assert stall["last_checkpoint_step"] == 15
+    assert stall["steps_since"] == 25 and stall["cadence"] == 5
+
+
+# --------------------------------------------- end-to-end straggler drill
+PS_MANIFEST = """
+name: health-drill
+learners: 2
+gpus: 1
+steps: 40
+checkpoint_every: 5
+lr: 0.3
+framework:
+  name: repro-mlp
+  d_in: 16
+  n_classes: 4
+  distribution: software-ps
+"""
+
+
+def test_straggler_alert_drives_learner_restart(tmp_path):
+    """Slow one PS learner mid-training: the HealthController must see
+    the BSP arrival-lag outlier, fire a straggler alert, preempt that
+    learner (whose restart clears the injected slowness), and the job
+    must still complete — with the whole story in /v1/alerts and the
+    job's trace timeline."""
+    from repro.platform.faults import FaultSchedule
+    from repro.service.core import DLaaSCore
+    from util_poll import wait_until
+
+    core = DLaaSCore(str(tmp_path), durable=False)
+    try:
+        core.health.cooldown_s = 1.0
+        mid = core.deploy_model(PS_MANIFEST)["model_id"]
+        tid = core.create_training(mid)["training_id"]
+        sched = FaultSchedule.seeded_straggler(11, tid, 2, at_step=3,
+                                               seconds=0.08)
+        victim = sched.events[0].member
+        core.inject_faults(events=sched.events)
+        scope = f"{tid}/learner-{victim}"
+        assert wait_until(
+            lambda: any(r["action"] == "restart_learner"
+                        and r["scope"] == scope
+                        for r in core.health.alerts.remediations()),
+            timeout=90), "straggler remediation never ran"
+        assert core.wait_for(tid, timeout=120) == "COMPLETED"
+        report = core.alerts()
+        fired = report["history"] + report["active"]
+        assert any(a["name"] == "straggler" and a["scope"] == scope
+                   for a in fired)
+        rem = [r for r in report["remediations"]
+               if r["action"] == "restart_learner"]
+        assert rem and rem[0]["task"] == f"{tid}-learners.{victim}"
+        # the preempt registered as a preemption against the tenant —
+        # the drain/requeue path, not a crash restart
+        app = core.scheduler.apps[f"{tid}-learners"]
+        assert core.scheduler.queue.tenant(app.tenant).preemptions >= 1
+        # alert + remediation landed in the job's trace timeline
+        names = [s["name"] for s in
+                 core.training_timeline(tid)["spans"]]
+        assert "alert" in names and "remediation" in names
+        # training still converged to the end
+        assert max(core.metrics.series(tid, "loss").steps) >= 39
+    finally:
+        core.close()
+
+
+def test_health_controller_queue_wait_burn_hints_autoscaler(tmp_path):
+    """A sustained per-tenant queue-wait burn must fire the queue-wait
+    SLO and nudge the autoscaler exactly once per cooldown."""
+    from repro.platform.health import HealthController
+    from repro.service.core import DLaaSCore
+
+    core = DLaaSCore(str(tmp_path), durable=False)
+    try:
+        core.scheduler.health_controller = None    # drive manually
+
+        class _Sched:
+            def queue_status(self):
+                return {"entries": [
+                    {"tenant": "acme", "waiting_s": 30.0}]}
+
+        class _Scaler:
+            def __init__(self):
+                self.hints = []
+
+            def hint_scale_up(self, reason=""):
+                self.hints.append(reason)
+
+        scaler = _Scaler()
+        hc = HealthController(core, autoscaler=scaler,
+                              min_eval_interval_s=0.0, cooldown_s=60.0)
+        core.scheduler.queue_status = _Sched().queue_status
+        t0 = time.time()
+        for i in range(12):
+            hc._sample_queue_wait(t0 + i * 0.05)
+        hc._evaluate(core.scheduler, t0 + 0.6)
+        hc._evaluate(core.scheduler, t0 + 0.65)    # inside the cooldown
+        assert any(a["name"] == "slo_queue_wait" and a["scope"] == "acme"
+                   for a in hc.alerts.active())
+        assert scaler.hints == ["queue_wait:acme"]
+        assert any(r["action"] == "scale_up_hint"
+                   for r in hc.alerts.remediations())
+        # once the burn ages out the alert resolves
+        hc._evaluate(core.scheduler, t0 + 300.0)
+        assert hc.alerts.active() == []
+    finally:
+        core.close()
+
+
+def test_slow_learner_injection_is_cleared_by_leave():
+    from repro.core.software_ps import SoftwareParameterServer
+    ps = SoftwareParameterServer(np.zeros(64, np.float32), n_shards=4,
+                                 n_learners=2, optimizer="sgd", lr=0.1)
+    ps.slow_learner(1, seconds=0.5)
+    assert ps.stats()["slow_slots"] == [1]
+    ps.join(1)
+    ps.leave(1)
+    assert ps.stats()["slow_slots"] == []
+
+
+def test_ps_records_arrival_lag_per_slot():
+    """The BSP barrier records each slot's arrival lag relative to the
+    round's first arrival — near-zero for the leader, positive for a
+    deliberately late pusher."""
+    from repro.core.software_ps import SoftwareParameterServer
+    m = MetricsService()
+    ps = SoftwareParameterServer(np.zeros(32, np.float32), n_shards=2,
+                                 n_learners=2, optimizer="sgd", lr=0.1,
+                                 metrics=m, job_id="lag")
+    ps.join(0)
+    ps.join(1)
+    import threading
+    g = np.ones(32, np.float32)
+
+    def late_push():
+        time.sleep(0.05)
+        ps.push(1, g)
+
+    t = threading.Thread(target=late_push)
+    t.start()
+    ps.push(0, g)
+    t.join()
+    first = m.series("lag", "ps_lag_s.0").values
+    late = m.series("lag", "ps_lag_s.1").values
+    assert first and late
+    assert first[0] == pytest.approx(0.0, abs=1e-3)
+    assert late[0] >= 0.04

@@ -149,6 +149,35 @@ def test_bounded_stream_drops_oldest():
     assert s.get(timeout=0.01) is None         # empty -> timeout
 
 
+def test_bounded_stream_drop_accounting_under_slow_consumer():
+    """A consumer slower than the producer loses exactly the overflow —
+    ``dropped`` accounts for every lost record and the survivors are
+    the NEWEST ones, in order (drop-oldest ring)."""
+    s = BoundedStream(maxlen=8)
+    produced = 100
+    for i in range(produced):          # consumer hasn't drained at all
+        s.put({"i": i})
+    assert s.dropped == produced - 8
+    got = []
+    while True:
+        rec = s.get(timeout=0)
+        if rec is None:
+            break
+        got.append(rec["i"])
+    assert got == list(range(92, 100))
+    assert s.dropped + len(got) == produced
+    # interleaved slow consumption: totals still reconcile
+    s2 = BoundedStream(maxlen=4)
+    consumed = 0
+    for i in range(50):
+        s2.put({"i": i})
+        if i % 10 == 0:
+            assert s2.get(timeout=0) is not None
+            consumed += 1
+    consumed += len(s2.drain())
+    assert consumed + s2.dropped == 50
+
+
 def test_bounded_stream_close_wakes_consumer():
     s = BoundedStream()
     out = []
@@ -281,6 +310,24 @@ def test_metric_stream_tap_and_drop_detaches():
     m.drop("j")
     assert tap.closed
     m.record("j", "loss", 1, 0.5)              # no tap left; no error
+
+
+def test_percentile_contract_on_empty_single_and_clamped_q():
+    """The documented contract the SLO engine leans on: empty/unknown
+    series -> None (never raises); a single sample answers every q;
+    q is effectively clamped to [0, 100]."""
+    m = MetricsService()
+    assert m.percentile("nope", "lat", 99) is None
+    m.record("j", "lat", 0, 0.5)
+    for q in (-10, 0, 50, 99, 100, 250):
+        assert m.percentile("j", "lat", q) == 0.5
+    for i, v in enumerate([0.1, 0.2, 0.3, 0.4]):
+        m.record("j2", "lat", i, v)
+    assert m.percentile("j2", "lat", 0) == 0.1
+    assert m.percentile("j2", "lat", -5) == 0.1
+    assert m.percentile("j2", "lat", 50) == 0.2
+    assert m.percentile("j2", "lat", 100) == 0.4
+    assert m.percentile("j2", "lat", 999) == 0.4
 
 
 def test_typed_wrappers_and_exporter_accessors():

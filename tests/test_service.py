@@ -125,6 +125,68 @@ def test_rest_overrides(server):
     assert server.core.training_status(tid)["steps_done"] >= 5
 
 
+def test_metrics_content_type_is_prometheus_004(server):
+    """GET /metrics must advertise the 0.0.4 text exposition — a
+    Prometheus scraper negotiates on this exact Content-Type."""
+    with urllib.request.urlopen(f"{server.url}/metrics") as r:
+        ctype = r.headers.get("Content-Type")
+        body = r.read().decode()
+    assert ctype == "text/plain; version=0.0.4; charset=utf-8"
+    from repro.observability.export import parse_prometheus_text
+    fams = parse_prometheus_text(body)["families"]
+    for name in ("dlaas_slo_burn_rate", "dlaas_slo_objective",
+                 "dlaas_alerts_active", "dlaas_alerts_fired_total",
+                 "dlaas_alerts_remediations_total"):
+        assert name in fams, name
+
+
+def test_follow_streams_exit_early_on_terminal_job(server):
+    """logs?follow=1 / metrics?follow=1 on an already-COMPLETED job must
+    replay what exists and return well before max_s — the terminal-state
+    check must win the race against the idle get() timeout loop."""
+    import time as _time
+    out = _req(f"{server.url}/v1/models", "POST", {"manifest": MANIFEST})
+    out = _req(f"{server.url}/v1/trainings", "POST",
+               {"model_id": out["model_id"],
+                "overrides": {"learners": 1, "steps": 5}})
+    tid = out["training_id"]
+    assert server.core.wait_for(tid, timeout=60) == "COMPLETED"
+    for what, check in (("logs", lambda r: "line" in r or "seq" in r),
+                        ("metrics", lambda r: "type" in r)):
+        t0 = _time.time()
+        with urllib.request.urlopen(
+                f"{server.url}/v1/trainings/{tid}/{what}"
+                "?follow=1&max_s=30") as r:
+            lines = [l for l in r.read().splitlines() if l.strip()]
+        elapsed = _time.time() - t0
+        assert elapsed < 10.0, \
+            f"{what}?follow=1 on a terminal job took {elapsed:.1f}s"
+        assert lines, f"{what} follow stream replayed nothing"
+        for raw in lines:
+            rec = json.loads(raw)          # every line is valid NDJSON
+            assert isinstance(rec, dict) and check(rec)
+
+
+def test_alerts_and_slo_endpoints(server):
+    rep = _req(f"{server.url}/v1/alerts")
+    assert set(rep) == {"active", "history", "remediations"}
+    assert isinstance(rep["active"], list)
+    slo = _req(f"{server.url}/v1/slo")
+    assert isinstance(slo, list)
+    for ev in slo:
+        assert {"name", "kind", "scope", "firing",
+                "burn", "windows"} <= set(ev)
+    # the follow stream leads with a snapshot line and honors max_s
+    with urllib.request.urlopen(
+            f"{server.url}/v1/alerts?follow=1&max_s=0.3") as r:
+        lines = [json.loads(l) for l in r.read().splitlines()
+                 if l.strip()]
+    assert lines and lines[0]["type"] == "snapshot"
+    assert "active" in lines[0]
+    # the handler unsubscribed its tap on the way out
+    assert server.core.health.alerts._streams == []
+
+
 def test_cli_against_live_server(server, tmp_path):
     from repro.service import cli
     mf = tmp_path / "m.yml"
@@ -148,3 +210,9 @@ def test_cli_against_live_server(server, tmp_path):
     assert status["status"] == "COMPLETED"
     logs = run("train", "logs", "--id", tid)
     assert "loss=" in logs
+    rep = json.loads(run("alerts"))
+    assert set(rep) == {"active", "history", "remediations"}
+    slo = json.loads(run("slo"))
+    assert isinstance(slo, list)
+    tail = run("alerts", "--follow", "--max-s", "0.3")
+    assert tail.startswith("[snapshot]")

@@ -1,0 +1,113 @@
+"""Property tests for the burn-rate math (ISSUE 10 satellite).
+
+The Hypothesis-driven parts skip cleanly when the library is absent
+(the container does not ship it); the seeded random sweep below them
+checks the same invariants with plain pytest so the properties are
+always exercised:
+
+  * burn is monotone non-decreasing in the error count,
+  * zero errors never burns (so an alert can never fire at zero errors),
+  * burn is window-consistent: a constant error rate yields the same
+    burn over any window that covers it, hence long-fires => short-fires.
+"""
+import random
+
+import pytest
+
+from repro.observability.slo import (BurnWindow, SLOSpec, SLOTracker,
+                                     burn_rate)
+
+
+def _check_monotone_in_bad(total, objective):
+    prev = -1.0
+    for bad in range(0, int(total) + 1):
+        b = burn_rate(bad, total, objective)
+        assert b >= prev, (bad, total, objective)
+        assert b >= 0.0
+        prev = b
+
+
+def _check_zero_errors_never_fire(goods, objective):
+    tr = SLOTracker(SLOSpec(name="p", kind="availability", scope="x",
+                            objective=objective,
+                            windows=(BurnWindow(10.0, 1.0, 1e-9),)))
+    for i, g in enumerate(goods):
+        tr.observe(g, 0, now=100.0 + i * 0.01)
+    ev = tr.evaluate(now=100.0 + len(goods) * 0.01)
+    assert not ev["firing"] and ev["burn"] == 0.0
+
+
+def _check_window_consistency(bad_frac, objective, factor):
+    """Constant error rate: every window sees the same burn, so a
+    firing long window implies a firing short window."""
+    w = BurnWindow(8.0, 2.0, factor)
+    tr = SLOTracker(SLOSpec(name="p", kind="latency_p99", scope="x",
+                            objective=objective, windows=(w,)))
+    t0 = 1000.0
+    for i in range(80):                  # 8s of uniform observations
+        tr.observe(1.0 - bad_frac, bad_frac, now=t0 + i * 0.1)
+    now = t0 + 8.0
+    bl, bs = tr.burn(w.long_s, now), tr.burn(w.short_s, now)
+    assert bl == pytest.approx(bs, rel=1e-6)
+    if bl >= factor:
+        assert bs >= factor              # long fires => short fires
+
+
+# ---------------------------------------------------------------- seeded
+def test_burn_monotone_in_error_count_sweep():
+    rng = random.Random(1234)
+    for _ in range(50):
+        _check_monotone_in_bad(rng.randint(1, 40),
+                               rng.uniform(0.5, 0.999))
+
+
+def test_zero_errors_never_fire_sweep():
+    rng = random.Random(99)
+    for _ in range(50):
+        goods = [rng.uniform(0.0, 10.0)
+                 for _ in range(rng.randint(0, 30))]
+        _check_zero_errors_never_fire(goods, rng.uniform(0.5, 1.0))
+
+
+def test_window_consistency_sweep():
+    rng = random.Random(7)
+    for _ in range(50):
+        _check_window_consistency(rng.uniform(0.0, 1.0),
+                                  rng.uniform(0.5, 0.99),
+                                  rng.uniform(0.5, 5.0))
+
+
+# ------------------------------------------------------------- hypothesis
+# Defined only when the library is importable (the seeded sweeps above
+# always run); a module-level importorskip would skip those too.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # pragma: no cover
+    st = None
+
+if st is not None:
+    _objectives = st.floats(min_value=0.5, max_value=0.999,
+                            allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=200, deadline=None)
+    @given(total=st.integers(min_value=1, max_value=200),
+           obj=_objectives)
+    def test_hyp_burn_monotone_in_bad(total, obj):
+        _check_monotone_in_bad(total, obj)
+
+    @settings(max_examples=200, deadline=None)
+    @given(goods=st.lists(st.floats(min_value=0.0, max_value=100.0,
+                                    allow_nan=False), max_size=50),
+           obj=st.floats(min_value=0.5, max_value=1.0,
+                         allow_nan=False))
+    def test_hyp_zero_errors_never_fire(goods, obj):
+        _check_zero_errors_never_fire(goods, obj)
+
+    @settings(max_examples=100, deadline=None)
+    @given(bad_frac=st.floats(min_value=0.0, max_value=1.0,
+                              allow_nan=False),
+           obj=_objectives,
+           factor=st.floats(min_value=0.1, max_value=10.0,
+                            allow_nan=False))
+    def test_hyp_window_consistency(bad_frac, obj, factor):
+        _check_window_consistency(bad_frac, obj, factor)
